@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: pallas (interpret) vs jnp reference wall time.
+
+On the CPU container interpret-mode timings are NOT TPU-indicative — the
+point of these rows is regression tracking of the wrapper overheads and
+a correctness-at-size spot check; TPU timing comes from the roofline.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # kmeans assignment at the paper's mid scenario (scaled)
+    from repro.kernels.kmeans import ops as km_ops, ref as km_ref
+    p = jnp.asarray(rng.normal(size=(8192, 3)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(64, 3)).astype(np.float32))
+    for name, fn in (("pallas", km_ops.assign),
+                     ("ref", jax.jit(km_ref.assign))):
+        dt = _time(fn, p, c)
+        rows.append({"name": f"kernels/kmeans_assign_8192x64/{name}",
+                     "us_per_call": dt * 1e6, "derived": ""})
+
+    # flash attention 1k sequence
+    from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+    q = jnp.asarray(rng.normal(size=(1, 1024, 4, 64)).astype(np.float32))
+    for name, fn in (("pallas", lambda a: fa_ops.attention(a, a, a)),
+                     ("ref", jax.jit(lambda a: fa_ref.attention(a, a, a)))):
+        dt = _time(fn, q)
+        rows.append({"name": f"kernels/flash_attn_1k/{name}",
+                     "us_per_call": dt * 1e6, "derived": ""})
+
+    # mamba scan
+    from repro.kernels.mamba_scan import ops as ms_ops, ref as ms_ref
+    B, S, di, st = 2, 256, 64, 16
+    a = jnp.asarray(rng.uniform(0.8, 0.99, (B, S, di, st)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(B, S, di, st)).astype(np.float32)) * .1
+    C = jnp.asarray(rng.normal(size=(B, S, st)).astype(np.float32))
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    for name, fn in (("pallas", lambda *xs: ms_ops.scan(*xs, bdi=64, bs=16)),
+                     ("ref", jax.jit(ms_ref.scan))):
+        dt = _time(fn, a, b, C, h0)
+        rows.append({"name": f"kernels/mamba_scan_256/{name}",
+                     "us_per_call": dt * 1e6, "derived": ""})
+    return rows

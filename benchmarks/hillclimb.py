@@ -1,0 +1,25 @@
+"""§Perf hillclimb driver: measure one (arch x shape x mesh) cell with
+explicit overrides and print the roofline terms + collective breakdown.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb deepseek-67b train_4k single \\
+        '{"n_microbatches": 4, "sp": true, "remat_policy": "save_tp_out"}'
+"""
+import json
+import sys
+
+from repro.launch.dryrun import run_cell  # sets XLA_FLAGS on import
+
+
+def main():
+    arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3]
+    overrides = json.loads(sys.argv[4]) if len(sys.argv) > 4 else {}
+    rec = run_cell(arch, shape, mesh == "multi", overrides=overrides,
+                   verbose=True)
+    c = rec.get("collectives", {})
+    print("collectives GB/dev:", {k: round(v / 1e9, 1) for k, v in c.items()})
+    print(json.dumps({k: rec[k] for k in ("terms", "n_microbatches")
+                      if k in rec}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON records."""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def main():
+    base = load("out/dryrun_baseline")
+    opt = load("out/dryrun")
+    print("### Roofline table — optimized (baseline in parentheses where changed)\n")
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "(baseline) | dominant | roofline frac (baseline) | useful-FLOP | "
+          "mem/dev GB | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        r = opt[key]
+        b = base.get(key, {})
+        if not r.get("applicable", True):
+            print(f"| {key[0]} | {key[1]} | {key[2]} | — | — | — | skipped | "
+                  f"{r['skip_reason'].split(':')[0]} | — | — | — |")
+            continue
+        t = r["terms"]
+        bt = b.get("terms", {})
+        coll = fmt_ms(t["collective_s"])
+        if bt and abs(bt["collective_s"] - t["collective_s"]) / max(bt["collective_s"], 1e-9) > 0.05:
+            coll += f" ({fmt_ms(bt['collective_s'])})"
+        frac = f"{t['roofline_fraction']:.3f}"
+        if bt and abs(bt["roofline_fraction"] - t["roofline_fraction"]) > 0.005:
+            frac += f" ({bt['roofline_fraction']:.3f})"
+        print(f"| {key[0]} | {key[1]} | {key[2]} | {fmt_ms(t['compute_s'])} | "
+              f"{fmt_ms(t['memory_s'])} | {coll} | {t['dominant']} | {frac} | "
+              f"{t['useful_flop_ratio']:.2f} | "
+              f"{r['analytic_peak_bytes_per_device']/1e9:.1f} | "
+              f"{'yes' if r['fits_hbm_analytic'] else 'NO'} |")
+
+    # summary stats
+    fracs = [r["terms"]["roofline_fraction"] for r in opt.values()
+             if r.get("applicable", True)]
+    bfr = [b["terms"]["roofline_fraction"] for b in base.values()
+           if b.get("applicable", True) and "terms" in b]
+    print(f"\nrunnable cells: {len(fracs)}; mean roofline fraction "
+          f"{sum(fracs)/len(fracs):.3f} (baseline {sum(bfr)/len(bfr):.3f})")
+    doms = {}
+    for r in opt.values():
+        if r.get("applicable", True):
+            doms[r["terms"]["dominant"]] = doms.get(r["terms"]["dominant"], 0) + 1
+    print("dominant terms:", doms)
+
+
+if __name__ == "__main__":
+    main()

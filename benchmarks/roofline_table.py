@@ -1,0 +1,45 @@
+"""Roofline table: aggregate the dry-run JSON records into CSV rows.
+
+The dry-run (``python -m repro.launch.dryrun``) must have populated
+``out/dryrun/`` first; this module just reads, derives, and formats —
+one row per (arch x shape x mesh) cell, matching EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_DIR = os.environ.get("DRYRUN_OUT", "out/dryrun")
+
+
+def run() -> List[Dict]:
+    rows = []
+    files = sorted(glob.glob(os.path.join(OUT_DIR, "*.json")))
+    if not files:
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": f"run `python -m repro.launch.dryrun` first ({OUT_DIR})"}]
+    for f in files:
+        r = json.load(open(f))
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "error" in r:
+            rows.append({"name": f"roofline/{tag}", "us_per_call": -1.0,
+                         "derived": "ERROR " + r["error"][:80]})
+            continue
+        if not r.get("applicable", True):
+            rows.append({"name": f"roofline/{tag}", "us_per_call": 0.0,
+                         "derived": "skipped: " + r["skip_reason"][:60]})
+            continue
+        t = r["terms"]
+        rows.append({
+            "name": f"roofline/{tag}",
+            "us_per_call": float(t["step_time_lower_bound_s"] * 1e6),
+            "derived": (f"compute={t['compute_s']*1e3:.1f}ms "
+                        f"memory={t['memory_s']*1e3:.1f}ms "
+                        f"collective={t['collective_s']*1e3:.1f}ms "
+                        f"dom={t['dominant']} "
+                        f"frac={t['roofline_fraction']:.3f} "
+                        f"useful={t['useful_flop_ratio']:.2f} "
+                        f"mem/dev={r['analytic_peak_bytes_per_device']/1e9:.1f}GB")})
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  fig5      — Pilot/CU startup overheads (paper Fig 5) + AppMaster reuse
+  fig6      — K-Means scenarios, local vs global data path (paper Fig 6)
+  kernels   — Pallas kernel micro-benchmarks vs jnp reference
+  roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig5", "fig6", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, fig5_overheads, fig6_kmeans, roofline_table
+    sections = {
+        "fig5": fig5_overheads.run,
+        "fig6": fig6_kmeans.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline_table.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — report, keep benching
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for r in rows:
+            derived = str(r["derived"]).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""The paper's motivating application: a coupled HPC + analytics pipeline
+on ONE pilot (Mode I), with the analytics result steering the next HPC
+stage — the molecular-dynamics 'simulate, cluster trajectories, refine'
+loop, realized as 'train, cluster activations, adapt'.
+
+    PYTHONPATH=src python examples/hybrid_pipeline.py
+
+Round structure:
+  HPC stage       train the model N steps (gang CU, all chips)
+  Mode I          carve an analytics cluster from the same allocation
+  analytics stage K-Means over the model's output embeddings (MapReduce)
+  steer           next round's data seed chosen from the cluster balance
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.analytics import kmeans as km
+from repro.core import ComputeUnitDescription, PilotDescription, PilotManager
+from repro.data.batches import make_batch
+from repro.models import transformer
+from repro.optim import adamw
+from repro.train.trainer import Trainer
+
+ROUNDS = 3
+STEPS_PER_ROUND = 10
+K = 4
+
+pm = PilotManager()
+pilot = pm.submit(PilotDescription(n_chips=1, name="hybrid"))
+cfg = configs.get_smoke("hymba-1.5b")
+
+trainer_box = {}
+seed = 0
+for rnd in range(ROUNDS):
+    # ---- HPC stage: gang-scheduled training CU ------------------------
+    def hpc_stage(seed=seed, mesh=None):
+        tr = trainer_box.get("tr")
+        if tr is None:
+            tr = Trainer(cfg, mesh, global_batch=4, seq=32,
+                         hyper=adamw.Hyper(lr=3e-3), seed=seed)
+            trainer_box["tr"] = tr
+        tr.pipeline.seed = seed
+        hist = tr.run((rnd + 1) * STEPS_PER_ROUND, log_every=0)
+        # 'trajectory' data: output logits of a probe batch, 3 features
+        rng = np.random.default_rng(seed)
+        probe = make_batch(cfg, "train", 4, 32, rng)
+        logits, _ = transformer.forward(cfg, tr.state["params"], probe,
+                                        remat=False)
+        traj = np.asarray(logits.reshape(-1, logits.shape[-1])[:, :3],
+                          np.float32)
+        return hist[-1]["loss"], traj
+
+    cu = pilot.submit(ComputeUnitDescription(
+        fn=hpc_stage, gang=True, n_chips=1, tag="sim"))
+    loss, traj = cu.wait(600)
+
+    # ---- Mode I: analytics stage on the same allocation ----------------
+    cluster = pilot.spawn_analytics_cluster(1)
+    cluster.engine.put("traj", traj)
+    centroids, cost = km.kmeans_fit(cluster.engine, "traj", K, iters=3)
+    sizes = np.bincount(
+        np.asarray(km.assign_partials(jnp.asarray(traj),
+                                      centroids)[1] > 0).astype(int),
+        minlength=2)
+    cluster.shutdown()
+
+    # ---- steer the next round ------------------------------------------
+    seed = int(cost) % 997
+    print(f"round {rnd}: train loss {loss:.3f} | kmeans cost {cost:.1f} "
+          f"on {traj.shape[0]} trajectory points | next seed {seed} "
+          f"(chips returned: {pilot.agent.scheduler.n_free})")
+
+pm.shutdown()
+print("pipeline complete.")

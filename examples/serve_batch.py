@@ -1,0 +1,39 @@
+"""Batched serving example: prefill + greedy decode of a small model on a
+pilot, reporting prefill latency and decode throughput.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch internvl2-2b
+"""
+import argparse
+
+from repro import configs
+from repro.core import ComputeUnitDescription, PilotDescription, PilotManager
+from repro.launch.serve import serve_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=configs.names())
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch)
+    pm = PilotManager()
+    pilot = pm.submit(PilotDescription(n_chips=1, name="serve"))
+    cu = pilot.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: serve_batch(
+            cfg, n_requests=args.requests, prompt_len=args.prompt_len,
+            gen=args.gen),
+        gang=True, n_chips=1, tag="serve"))
+    res = cu.wait(600)
+    print(f"{args.arch}: {args.requests} requests, prompt {args.prompt_len}, "
+          f"gen {args.gen}")
+    print(f"  prefill {res['prefill_s']*1e3:.0f} ms | decode "
+          f"{res['decode_s']*1e3:.0f} ms | {res['tok_per_s']:.1f} tok/s")
+    print(f"  sample tokens: {res['tokens'][0][:8].tolist()}")
+    pm.shutdown()
+
+
+if __name__ == "__main__":
+    main()

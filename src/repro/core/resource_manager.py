@@ -1,0 +1,66 @@
+"""System-level resource manager (the SLURM/PBS analogue).
+
+Owns the global device pool and leases contiguous slices to Pilots.
+On the CPU dry-run container this manages host devices; on a real pod it
+manages TPU chips — the Pilot layer is agnostic.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+HBM_BYTES_PER_CHIP = 16 * 1024**3  # TPU v5e
+
+
+class ResourceManager:
+    def __init__(self, devices: Optional[Sequence] = None,
+                 hbm_per_chip: int = HBM_BYTES_PER_CHIP):
+        self._devices = list(devices if devices is not None else jax.devices())
+        self._leased: Dict[int, str] = {}  # device index -> pilot id
+        self._failed: set[int] = set()
+        self._lock = threading.Lock()
+        self.hbm_per_chip = hbm_per_chip
+
+    @property
+    def n_devices(self) -> int:
+        return len(self._devices)
+
+    def free_indices(self) -> List[int]:
+        with self._lock:
+            return [i for i in range(len(self._devices))
+                    if i not in self._leased and i not in self._failed]
+
+    def lease(self, n: int, pilot_id: str) -> List:
+        """Lease n devices (contiguous-first, like a rack-aware RM)."""
+        with self._lock:
+            free = [i for i in range(len(self._devices))
+                    if i not in self._leased and i not in self._failed]
+            if len(free) < n:
+                raise RuntimeError(
+                    f"insufficient devices: want {n}, free {len(free)}")
+            take = free[:n]
+            for i in take:
+                self._leased[i] = pilot_id
+            return [self._devices[i] for i in take]
+
+    def release(self, pilot_id: str) -> None:
+        with self._lock:
+            self._leased = {i: p for i, p in self._leased.items()
+                            if p != pilot_id}
+
+    def release_devices(self, devices: Sequence) -> None:
+        idx = {id(d): i for i, d in enumerate(self._devices)}
+        with self._lock:
+            for d in devices:
+                self._leased.pop(idx.get(id(d), -1), None)
+
+    def mark_failed(self, device) -> None:
+        """Simulated node failure: device leaves the pool permanently."""
+        idx = {id(d): i for i, d in enumerate(self._devices)}
+        with self._lock:
+            i = idx.get(id(device))
+            if i is not None:
+                self._failed.add(i)
+                self._leased.pop(i, None)

@@ -1,0 +1,200 @@
+"""YARN-style application-level scheduler for a Pilot's device slice.
+
+Mirrors the paper's description of resource management on YARN:
+  * slots are (chips, HBM-bytes) pairs — the scheduler tracks both, like
+    YARN's (vcores, memory) DominantResourceCalculator;
+  * two-phase admission: an AppMaster reservation precedes container
+    binding (the paper measures this as the dominant CU-startup cost);
+    ``reuse_app_master=True`` amortizes phase 1 across CUs of the same
+    app — the paper's stated future optimization, implemented here;
+  * gang scheduling: HPC-stage CUs get all requested chips atomically or
+    wait (what YARN could not do, motivating Mode II);
+  * data locality: candidate device sets are scored against the CU's
+    PilotData placement; scheduling is delayed up to
+    ``locality_delay_rounds`` in the hope a local slot frees up (YARN's
+    delay scheduling), after which it falls back to any slot.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .compute_unit import ComputeUnit, CUState
+from .pilot_data import PilotDataRegistry
+
+APP_MASTER_CHIPS = 1  # phase-1 reservation size (YARN AppMaster container)
+
+
+class YarnStyleScheduler:
+    def __init__(self, devices: Sequence, hbm_per_chip: int,
+                 data_registry: Optional[PilotDataRegistry] = None, *,
+                 reuse_app_master: bool = True,
+                 locality_delay_rounds: int = 3,
+                 app_master_overhead_s: float = 0.0):
+        self._devices = list(devices)
+        self._hbm = hbm_per_chip
+        self._free: Set[int] = set(range(len(self._devices)))
+        self._mem_free: Dict[int, int] = {i: hbm_per_chip
+                                          for i in range(len(self._devices))}
+        self._queue: List[ComputeUnit] = []
+        self._running: Dict[str, List[int]] = {}
+        self._app_masters: Dict[str, int] = {}     # app_id -> device idx
+        self._skip_counts: Dict[str, int] = {}
+        self.reuse_app_master = reuse_app_master
+        self.locality_delay_rounds = locality_delay_rounds
+        self.app_master_overhead_s = app_master_overhead_s
+        self.data = data_registry or PilotDataRegistry()
+        self._lock = threading.Lock()
+        self.stats = {"scheduled": 0, "locality_hits": 0, "locality_misses": 0,
+                      "app_masters_started": 0, "app_masters_reused": 0}
+
+    # ----------------------------------------------------------- lifecycle
+    def submit(self, cu: ComputeUnit) -> None:
+        with self._lock:
+            cu._set_state(CUState.PENDING)
+            self._queue.append(cu)
+            self._queue.sort(key=lambda c: -c.desc.priority)
+
+    def devices_of(self, idxs: Sequence[int]) -> List:
+        return [self._devices[i] for i in idxs]
+
+    # ------------------------------------------------------------ placement
+    def _candidate(self, cu: ComputeUnit) -> Optional[List[int]]:
+        """Pick device indices for a CU, honoring slots + locality."""
+        need = cu.desc.n_chips
+        mem = cu.desc.memory_bytes or 0
+        mem_per = mem // max(need, 1)
+        eligible = [i for i in sorted(self._free)
+                    if self._mem_free[i] >= mem_per]
+        if len(eligible) < need:
+            return None
+        if not cu.desc.data:
+            return eligible[:need]
+        # locality scoring: prefer chips already holding the CU's data
+        best, best_score = None, -1.0
+        for start in range(0, len(eligible) - need + 1):
+            cand = eligible[start:start + need]
+            score = self.data.locality_score(
+                cu.desc.data, self.devices_of(cand))
+            if score > best_score:
+                best, best_score = cand, score
+        if best_score < 1.0:
+            # delay scheduling: skip a few rounds hoping a local slot frees
+            skips = self._skip_counts.get(cu.uid, 0)
+            if skips < self.locality_delay_rounds:
+                self._skip_counts[cu.uid] = skips + 1
+                return None
+            self.stats["locality_misses"] += 1
+        else:
+            self.stats["locality_hits"] += 1
+        return best
+
+    def _admit(self, cu: ComputeUnit) -> Optional[List[int]]:
+        """Two-phase admission; returns bound device indices or None."""
+        app = cu.desc.app_id or cu.uid
+        # phase 1: AppMaster reservation
+        if app not in self._app_masters:
+            if not self._free:
+                return None
+            am = min(self._free)
+            self._app_masters[app] = am
+            self.stats["app_masters_started"] += 1
+            if self.app_master_overhead_s:
+                time.sleep(self.app_master_overhead_s)
+        elif self.reuse_app_master:
+            self.stats["app_masters_reused"] += 1
+        cu._set_state(CUState.RESERVED)
+        # phase 2: container binding
+        cand = self._candidate(cu)
+        if cand is None:
+            return None
+        mem_per = (cu.desc.memory_bytes or 0) // max(cu.desc.n_chips, 1)
+        for i in cand:
+            self._free.discard(i)
+            self._mem_free[i] -= mem_per
+        self._running[cu.uid] = cand
+        self.stats["scheduled"] += 1
+        return cand
+
+    def try_schedule(self) -> List[Tuple[ComputeUnit, List[int]]]:
+        """One scheduling round: returns newly-bound (cu, device idxs)."""
+        out = []
+        with self._lock:
+            remaining = []
+            for cu in self._queue:
+                if cu.state is CUState.CANCELED:
+                    continue
+                if cu.desc.gang and cu.desc.n_chips > len(self._devices):
+                    cu.error = RuntimeError(
+                        f"gang of {cu.desc.n_chips} > pilot size {len(self._devices)}")
+                    cu._set_state(CUState.FAILED)
+                    continue
+                cand = self._admit(cu)
+                if cand is None:
+                    remaining.append(cu)
+                else:
+                    out.append((cu, cand))
+            self._queue = remaining
+        return out
+
+    # ----------------------------------------------------------- preemption
+    def preemption_victims(self, cu: ComputeUnit,
+                           running: Dict[str, ComputeUnit]) -> List[str]:
+        """YARN-style preemption: a high-priority pending CU may evict
+        enough strictly-lower-priority running CUs to free its slots.
+        Returns victim uids (lowest priority first) or [] if impossible.
+        The paper notes YARN 'can preempt containers in high-load
+        situations' — the agent re-queues victims (bounded by retries)."""
+        need = cu.desc.n_chips - len(self._free)
+        if need <= 0:
+            return []
+        candidates = sorted(
+            ((v, self._running.get(v.uid, [])) for v in running.values()
+             if v.state is CUState.RUNNING
+             and v.desc.priority < cu.desc.priority
+             and not v.desc.gang),
+            key=lambda pair: pair[0].desc.priority)
+        victims, freed = [], 0
+        for v, idxs in candidates:
+            victims.append(v.uid)
+            freed += len(idxs)
+            if freed >= need:
+                return victims
+        return []
+
+    def release(self, cu: ComputeUnit) -> None:
+        with self._lock:
+            idxs = self._running.pop(cu.uid, [])
+            mem_per = (cu.desc.memory_bytes or 0) // max(cu.desc.n_chips, 1)
+            for i in idxs:
+                self._free.add(i)
+                self._mem_free[i] += mem_per
+            if not self.reuse_app_master:
+                self._app_masters.pop(cu.desc.app_id or cu.uid, None)
+
+    # ------------------------------------------------------------- elastic
+    def remove_devices(self, idxs: Sequence[int]) -> List[str]:
+        """Take devices away (failure/shrink). Returns uids of impacted CUs."""
+        impacted = []
+        with self._lock:
+            for i in idxs:
+                self._free.discard(i)
+                self._mem_free.pop(i, None)
+            for uid, assigned in list(self._running.items()):
+                if set(assigned) & set(idxs):
+                    impacted.append(uid)
+        return impacted
+
+    def add_devices(self, devices: Sequence) -> None:
+        with self._lock:
+            base = len(self._devices)
+            self._devices.extend(devices)
+            for j in range(len(devices)):
+                self._free.add(base + j)
+                self._mem_free[base + j] = self._hbm
+
+    @property
+    def n_free(self) -> int:
+        with self._lock:
+            return len(self._free)

@@ -1,0 +1,1 @@
+from . import batches  # noqa: F401

@@ -1,0 +1,82 @@
+"""Batch construction + ShapeDtypeStruct input specs for every model input.
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable
+stand-ins for every input of train/prefill/decode steps — no device
+allocation. ``make_batch`` builds the same pytree with real (synthetic)
+data for smoke tests and examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models import transformer
+
+DEFAULT_ENC_LEN = 4096  # encoder length for enc-dec decode cells
+
+
+def batch_shapes(cfg: ModelConfig, kind: str, batch: int, seq: int) -> Dict[str, Tuple]:
+    """Logical shapes for one step input, keyed by input name."""
+    text_len = seq - cfg.n_frontend_tokens if cfg.frontend == "vision" else seq
+    shapes: Dict[str, Tuple] = {}
+    if kind in ("train", "prefill"):
+        shapes["tokens"] = (batch, text_len)
+        if cfg.frontend == "vision":
+            shapes["patch_embeds"] = (batch, cfg.n_frontend_tokens, cfg.d_model)
+        if cfg.is_encoder_decoder:
+            shapes["frame_embeds"] = (batch, seq, cfg.d_model)
+        if kind == "train":
+            shapes["labels"] = (batch, text_len)
+            shapes["mask"] = (batch, text_len)
+    else:  # decode
+        shapes["tokens"] = (batch, 1)
+        shapes["pos"] = (batch,)
+    return shapes
+
+
+def _dtype_of(name: str, cfg: ModelConfig):
+    if name in ("tokens", "labels"):
+        return jnp.int32
+    if name == "pos":
+        return jnp.int32
+    if name == "mask":
+        return jnp.float32
+    return cfg.param_dtype  # embeddings from stub frontends
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    out = {
+        name: jax.ShapeDtypeStruct(shp, _dtype_of(name, cfg))
+        for name, shp in batch_shapes(cfg, shape.kind, shape.global_batch,
+                                      shape.seq_len).items()
+    }
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                enc_len: int = DEFAULT_ENC_LEN) -> Any:
+    """ShapeDtypeStructs for the decode cache (as produced by init_caches)."""
+    enc = enc_len if cfg.is_encoder_decoder else 0
+    return jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, max_seq, enc))
+
+
+def make_batch(cfg: ModelConfig, kind: str, batch: int, seq: int,
+               rng: np.random.Generator) -> Dict[str, jax.Array]:
+    """Synthetic batch with real values (smoke tests / examples)."""
+    out: Dict[str, jax.Array] = {}
+    for name, shp in batch_shapes(cfg, kind, batch, seq).items():
+        if name in ("tokens", "labels"):
+            out[name] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp), jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.zeros(shp, jnp.int32)
+        elif name == "mask":
+            out[name] = jnp.ones(shp, jnp.float32)
+        else:
+            out[name] = jnp.asarray(rng.normal(size=shp) * 0.02, _dtype_of(name, cfg))
+    return out

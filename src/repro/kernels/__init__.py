@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a triple:
+  <name>/<name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  <name>/ops.py    — jit'd public wrapper (padding, interpret fallback)
+  <name>/ref.py    — pure-jnp oracle used by the allclose sweeps
+
+On this CPU container kernels are validated with interpret=True; on TPU
+set ``repro.kernels.INTERPRET = False`` (ops modules read it per call).
+"""
+INTERPRET = True  # CPU container: execute kernel bodies via the interpreter

@@ -1,0 +1,30 @@
+"""Public jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels as K
+from . import flash_attention as kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              bq: int = 256, bk: int = 256) -> jax.Array:
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd). GQA callers repeat KV first."""
+    B, S_q, H, hd = q.shape
+    S_k = k.shape[1]
+    bq = min(bq, S_q)
+    bk = min(bk, S_k)
+    assert S_q % bq == 0 and S_k % bk == 0, (S_q, S_k, bq, bk)
+
+    def flat(x):
+        return x.swapaxes(1, 2).reshape(B * H, x.shape[1], hd)
+
+    out = kernel.flash_attention_pallas(
+        flat(q), flat(k), flat(v), causal=causal, window=window,
+        bq=bq, bk=bk, interpret=K.INTERPRET)
+    return out.reshape(B, H, S_q, hd).swapaxes(1, 2)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal / windowed / bidirectional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0) -> jax.Array:
+    """q,k,v: (B, S, H, hd) -> (B, S, H, hd). Softmax in f32."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    S_q, S_k = q.shape[1], k.shape[1]
+    qp = jnp.arange(S_q)
+    kp = jnp.arange(S_k)
+    ok = jnp.ones((S_q, S_k), bool)
+    if causal:
+        ok &= qp[:, None] >= kp[None, :]
+    if window:
+        ok &= (qp[:, None] - kp[None, :]) < window
+    logits = jnp.where(ok, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

@@ -1,0 +1,1 @@
+from . import kmeans, ops, ref  # noqa: F401

@@ -1,0 +1,41 @@
+"""Public jit'd wrapper for the K-Means assignment kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels as K
+from . import kmeans as kernel
+
+_PAD_VALUE = 1e8  # padded centroids land far away from every point
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def _assign(points, centroids, bn: int, bk: int):
+    n, d = points.shape
+    k = centroids.shape[0]
+    np_, kp = _round_up(n, bn), _round_up(k, bk)
+    p = jnp.pad(points.astype(jnp.float32), ((0, np_ - n), (0, 0)))
+    c = jnp.pad(centroids.astype(jnp.float32), ((0, kp - k), (0, 0)),
+                constant_values=_PAD_VALUE)
+    idx, partial_min = kernel.assign_pallas(p, c, bn=bn, bk=bk,
+                                            interpret=K.INTERPRET)
+    mind = partial_min + jnp.sum(points.astype(jnp.float32) ** 2, axis=1) \
+        if np_ == n else (partial_min[:n]
+                          + jnp.sum(points.astype(jnp.float32) ** 2, axis=1))
+    return idx[:n], mind
+
+
+def assign(points: jax.Array, centroids: jax.Array, *, bn: int = 1024,
+           bk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment via the Pallas kernel (padded + jit)."""
+    bn = min(bn, _round_up(points.shape[0], 8))
+    bk = min(bk, _round_up(centroids.shape[0], 8))
+    return _assign(points, centroids, bn, bk)

@@ -1,0 +1,1 @@
+from . import mamba_scan, ops, ref  # noqa: F401

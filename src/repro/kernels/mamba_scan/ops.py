@@ -1,0 +1,23 @@
+"""Public jit'd wrapper for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels as K
+from . import mamba_scan as kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bdi", "bs"))
+def scan(a: jax.Array, b: jax.Array, C: jax.Array, h0: jax.Array, *,
+         bdi: int = 512, bs: int = 16) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan. a,b: (B,S,di,st); C: (B,S,st); h0: (B,di,st)."""
+    B, S, di, st = a.shape
+    bdi = min(bdi, di)
+    bs = min(bs, S)
+    assert di % bdi == 0 and S % bs == 0, (di, S, bdi, bs)
+    return kernel.mamba_scan_pallas(a, b, C, h0, bdi=bdi, bs=bs,
+                                    interpret=K.INTERPRET)

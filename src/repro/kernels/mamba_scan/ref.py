@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Mamba selective-scan kernel.
+
+Sequential recurrence (the ground truth the chunked kernel must match):
+    h_t = a_t * h_{t-1} + b_t         (elementwise over (di, st))
+    y_t = sum_st h_t * C_t            (readout over the state dim)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scan(a: jax.Array, b: jax.Array, C: jax.Array,
+         h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """a,b: (B,S,di,st); C: (B,S,st); h0: (B,di,st) ->
+    (y (B,S,di) f32, h_last (B,di,st))."""
+    def step(h, xs):
+        a_t, b_t, c_t = xs
+        h = a_t * h + b_t
+        y = jnp.einsum("bin,bn->bi", h, c_t)
+        return h, y
+
+    xs = (a.swapaxes(0, 1), b.swapaxes(0, 1), C.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_last

@@ -1,0 +1,1 @@
+from . import attention, common, mamba, moe  # noqa: F401

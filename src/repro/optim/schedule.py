@@ -1,0 +1,14 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to `floor` * peak."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos

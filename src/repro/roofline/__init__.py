@@ -1,0 +1,2 @@
+from .hlo import collective_bytes_per_device  # noqa: F401
+from .terms import HW, roofline_terms  # noqa: F401

@@ -1,0 +1,142 @@
+"""Collective-byte extraction from compiled (post-SPMD) HLO text.
+
+XLA's HloCostAnalysis visits every instruction **once** — ``while`` loop
+bodies (from lax.scan over layers / microbatches) are not multiplied by
+their trip count. We therefore walk the computation graph from ENTRY,
+carrying a trip-count multiplier extracted from each while's condition
+computation, and sum collective payload bytes per device.
+
+Payload convention (per device):
+  all-gather          : result bytes - operand bytes (what arrives on wire)
+  reduce-scatter      : operand bytes - result bytes (what leaves)
+  all-reduce          : 2 x operand bytes (ring = RS + AG)
+  all-to-all          : operand bytes
+  collective-permute  : result bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# nested parens appear in tuple-typed params: match only the name prefix
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_CALL_ATTR = re.compile(r"(?:condition|body|to_apply|branch_computations)=\{?%?([\w\.\-,% ]+)\}?")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is not None and stripped.startswith("%") or (
+                cur is not None and stripped.startswith("ROOT")):
+            comps[cur].append(stripped)
+        if stripped == "}":
+            cur = None
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the while-condition computation."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_per_device(hlo: str) -> Dict[str, float]:
+    """Sum per-device collective payload bytes, loop-aware.
+
+    Returns {"all-reduce": bytes, ..., "total": bytes}.
+    """
+    comps = parse_computations(hlo)
+    if "__entry__" not in comps:
+        return {"total": 0.0}
+
+    totals: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+
+    def op_payload(kind: str, line: str) -> float:
+        # result type is between '=' and the op name
+        m = re.search(r"=\s*(.+?)\s*" + kind + r"(?:-start)?\(", line)
+        result_b = _shape_bytes(m.group(1)) if m else 0
+        # operand shapes appear inside the parens as %refs (no shapes);
+        # for simple ops, operand bytes == result bytes except gather/scatter
+        if kind == "all-gather":
+            # result = operand * group_size; wire = result - operand
+            g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            group = int(g.group(2)) if g else 2
+            return result_b * (group - 1) / group
+        if kind == "reduce-scatter":
+            g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            group = int(g.group(2)) if g else 2
+            return result_b * (group - 1)  # operand = result * group
+        if kind == "all-reduce":
+            g = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            group = int(g.group(2)) if g else 2
+            return 2.0 * result_b * (group - 1) / group
+        return float(result_b)
+
+    visited_stack = set()
+
+    def walk(comp: str, mult: float):
+        if comp not in comps or comp in visited_stack:
+            return
+        visited_stack.add(comp)
+        for line in comps[comp]:
+            mk = re.search(r"=\s*[^=]*?\b(" + "|".join(COLLECTIVES) + r")(?:-start)?\(",
+                           line)
+            if mk:
+                kind = mk.group(1)
+                totals[kind] += mult * op_payload(kind, line)
+            if " while(" in line:
+                attrs = dict(re.findall(r"(condition|body)=%?([\w\.\-]+)", line))
+                trips = _trip_count(comps.get(attrs.get("condition", ""), []))
+                walk(attrs.get("body", ""), mult * trips)
+            elif " call(" in line or " fusion(" in line or "custom-call" in line:
+                for m in re.finditer(r"to_apply=%?([\w\.\-]+)", line):
+                    walk(m.group(1), mult)
+            elif " conditional(" in line:
+                bs = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if bs:
+                    for b in bs.group(1).replace("%", "").split(","):
+                        walk(b.strip(), mult)
+        visited_stack.discard(comp)
+
+    walk("__entry__", 1.0)
+    totals["total"] = sum(totals.values())
+    return totals

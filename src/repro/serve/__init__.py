@@ -1,0 +1,2 @@
+from .engine import Request, ServeEngine  # noqa: F401
+from .step import make_decode_step, make_prefill_step  # noqa: F401

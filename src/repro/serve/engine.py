@@ -1,0 +1,140 @@
+"""Continuous-batching serving engine.
+
+The framework's serving CU kind: a request queue feeding a fixed-width
+decode batch. Requests join mid-flight as slots free up (continuous
+batching) — prefill for a joining request runs while other slots keep
+decoding; per-slot positions live in the `pos` vector the decode step
+already takes. The whole engine runs as one long-lived gang CU on a
+Pilot (examples/serve_batch.py shows the one-shot variant).
+
+Single-request prefill uses the shared jitted prefill at fixed prompt
+buckets (pad-to-bucket keeps recompilation bounded). Prompts are
+left-padded into the bucket; pad positions are attended (a pad mask is
+the quality-side TODO — system behaviour, latency accounting and cache
+splicing are what this engine demonstrates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serve.step import make_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray            # prompt token ids (1-D)
+    max_new: int = 16
+    done: bool = False
+    output: Optional[np.ndarray] = None
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, prompt_bucket: int = 32):
+        assert cfg.frontend == "none" and not cfg.is_encoder_decoder, \
+            "continuous batching engine supports plain LM archs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.bucket = prompt_bucket
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._decode = jax.jit(make_decode_step(cfg, sample=True),
+                               donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(cfg, p, b))
+        self.caches = transformer.init_caches(cfg, slots, max_seq)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.outputs: Dict[int, List[int]] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.monotonic()
+        self.queue.put(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None:
+                continue
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Run bucketed prefill for one request; splice its cache rows in."""
+        plen = len(req.tokens)
+        bucket = min(self.max_seq,
+                     ((plen + self.bucket - 1) // self.bucket) * self.bucket)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, -plen:] = req.tokens          # left-pad: last pos = last tok
+        caches1, logits = self._prefill(self.params, {"tokens": jnp.asarray(padded)})
+
+        # splice: grow the single-request cache to max_seq and write slot row
+        grown = jax.eval_shape(
+            lambda: transformer.init_caches(self.cfg, 1, self.max_seq))
+
+        def splice(full, one, spec):
+            pad = [(0, t - s) for s, t in zip(one.shape, spec.shape)]
+            one = jnp.pad(one, pad)
+            return full.at[:, slot:slot + 1].set(one)
+
+        self.caches = jax.tree.map(splice, self.caches, caches1, grown)
+        nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
+        self.cur_tok = self.cur_tok.at[slot, 0].set(nxt)
+        self.pos = self.pos.at[slot].set(bucket)
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new - 1
+        self.outputs[req.uid] = [nxt]
+        req.t_first_token = time.monotonic()
+
+    # -------------------------------------------------------------- decode
+    def _step(self) -> None:
+        self.caches, _, nxt = self._decode(self.params, self.caches,
+                                           self.cur_tok, self.pos)
+        self.cur_tok = nxt
+        self.pos = self.pos + jnp.where(
+            jnp.asarray([a is not None for a in self.active]), 1, 0)
+        self.steps += 1
+        toks = np.asarray(nxt[:, 0])
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.outputs[req.uid].append(int(toks[slot]))
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
+                req.output = np.asarray(self.outputs.pop(req.uid), np.int32)
+                req.done = True
+                req.t_done = time.monotonic()
+                self.active[slot] = None
+
+    # ----------------------------------------------------------------- run
+    def run_until_drained(self, timeout_s: float = 300.0) -> int:
+        """Serve until queue + slots are empty. Returns decode steps run."""
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout_s:
+            self._admit()
+            if not any(a is not None for a in self.active):
+                if self.queue.empty():
+                    return self.steps
+                continue
+            self._step()
+        raise TimeoutError("serve queue not drained")

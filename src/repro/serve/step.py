@@ -1,0 +1,38 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token, KV cache).
+
+``decode`` is the unit lowered for the ``decode_*`` / ``long_*`` cells:
+one new token for the whole batch against a seq_len-deep cache, with the
+cache donated (in-place ring-buffer update on real hardware).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, *, moe_groups: int = 1,
+                      moe_ep_axis=None):
+    def prefill_step(params, batch):
+        caches, logits = transformer.prefill(cfg, params, batch,
+                                             moe_groups=moe_groups,
+                                             moe_ep_axis=moe_ep_axis)
+        return caches, logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, sample: bool = False,
+                     moe_groups: int = 1, moe_ep_axis=None):
+    def decode_step(params, caches, tokens, pos):
+        caches, logits = transformer.decode_step(cfg, params, caches, tokens, pos,
+                                                 moe_groups=moe_groups,
+                                                 moe_ep_axis=moe_ep_axis)
+        if sample:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return caches, logits, nxt[:, None]
+        return caches, logits
+    return decode_step

@@ -1,0 +1,1 @@
+from .planner import Plan  # noqa: F401

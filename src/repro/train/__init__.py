@@ -1,0 +1,1 @@
+from .step import make_train_state, make_train_step, microbatch_count  # noqa: F401

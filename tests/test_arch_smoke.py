@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests on reduced configs (CPU, 1 device).
+
+For every assigned architecture: one forward + one train step on a tiny
+same-family config, asserting output shapes and no NaNs; plus a
+prefill->decode vs full-forward teacher-forcing consistency check for
+one arch per family (the strongest correctness invariant of the serving
+path: incremental decoding must reproduce the parallel forward).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.batches import make_batch
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+ARCHS = configs.names()
+
+
+def _tiny(name: str) -> ModelConfig:
+    return configs.get_smoke(name)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = _tiny(arch)
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    batch = make_batch(cfg, "train", B, S, rng)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    logits, aux = transformer.forward(cfg, params, batch, remat=False)
+    S_total = S if cfg.frontend != "vision" else S
+    assert logits.shape == (B, S_total, cfg.vocab_padded), logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits))), "non-finite logits"
+    loss = transformer.loss_fn(cfg, params, batch, remat=False)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"loss={loss}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads(arch):
+    cfg = _tiny(arch)
+    rng = np.random.default_rng(1)
+    batch = make_batch(cfg, "train", 2, 32, rng)
+    params = transformer.init_params(cfg, jax.random.key(1))
+
+    loss, grads = jax.jit(
+        lambda p, b: jax.value_and_grad(lambda q: transformer.loss_fn(cfg, q, b))(p)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), "non-finite grads"
+    # at least the embedding gets a nonzero gradient
+    assert float(jnp.abs(grads["embed"]).sum()) > 0.0
+
+
+@pytest.mark.parametrize(
+    "arch", ["deepseek-67b", "hymba-1.5b", "falcon-mamba-7b",
+             "qwen2-moe-a2.7b", "deepseek-v2-236b", "seamless-m4t-medium",
+             "internvl2-2b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced incremental decode == parallel forward logits."""
+    cfg = _tiny(arch)
+    rng = np.random.default_rng(2)
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    B, S_total = 2, 48                      # absolute sequence length
+    text_total = S_total - n_front          # tokens in batch["tokens"]
+    text_prompt = 40 - n_front              # prompt portion of the text
+    max_seq = 64
+    batch = make_batch(cfg, "train", B, S_total, rng)
+    params = transformer.init_params(cfg, jax.random.key(2))
+
+    full_logits, _ = transformer.forward(cfg, params, batch, remat=False)
+
+    pre = {k: (v[:, :text_prompt] if k in ("tokens",) else v)
+           for k, v in batch.items() if k not in ("labels", "mask")}
+    caches, logits_last = transformer.prefill(cfg, params, pre)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_last[:, 0, : cfg.vocab_size]),
+        np.asarray(full_logits[:, n_front + text_prompt - 1, : cfg.vocab_size]),
+        rtol=2e-3, atol=2e-3)
+
+    # grow prefill caches into max_seq ring/linear decode buffers
+    enc_len = batch["frame_embeds"].shape[1] if cfg.is_encoder_decoder else 0
+    grown = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, B, max_seq, enc_len))
+
+    def grow(buf, spec):
+        pad = [(0, ts - s) for s, ts in zip(buf.shape, spec.shape)]
+        return jnp.pad(buf, pad)
+
+    caches = jax.tree.map(grow, caches, grown)
+
+    step = jax.jit(lambda c, t, p: transformer.decode_step(cfg, params, c, t, p))
+    for t in range(text_prompt, text_total):
+        tok = batch["tokens"][:, t: t + 1]
+        pos = jnp.full((B,), n_front + t, jnp.int32)
+        caches, logits = step(caches, tok, pos)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0, : cfg.vocab_size]),
+            np.asarray(full_logits[:, n_front + t, : cfg.vocab_size]),
+            rtol=2e-3, atol=2e-3, err_msg=f"{arch} step {t}")

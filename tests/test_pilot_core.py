@@ -1,0 +1,197 @@
+"""Pilot-Abstraction behaviour tests: lifecycle, scheduling, modes, faults."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeUnitDescription, CUState, PilotDescription,
+                        PilotManager, ResourceManager)
+
+
+@pytest.fixture
+def pm():
+    m = PilotManager(ResourceManager())
+    yield m
+    m.shutdown()
+
+
+def test_pilot_lifecycle(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1, name="t"))
+    assert pilot.state.value == "active"
+    assert len(pilot.devices) == 1
+    assert pilot.startup_s() >= 0
+    pilot.shutdown()
+    assert pilot.state.value == "done"
+
+
+def test_cu_executes_and_reports_timings(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    cu = pilot.submit(ComputeUnitDescription(
+        fn=lambda x, mesh=None: x * 2, args=(21,), tag="t"))
+    assert cu.wait(30) == 42
+    assert cu.state is CUState.DONE
+    assert cu.overhead_s() is not None and cu.overhead_s() >= 0
+    assert cu.runtime_s() is not None
+
+
+def test_many_cus_bin_packed(pm):
+    """Fine-grained CUs share the pilot (Hadoop-style bin packing)."""
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    cus = [pilot.submit(ComputeUnitDescription(
+        fn=lambda i=i, mesh=None: i * i, n_chips=1, tag="map"))
+        for i in range(20)]
+    results = sorted(cu.wait(60) for cu in cus)
+    assert results == sorted(i * i for i in range(20))
+
+
+def test_gang_scheduling_atomicity(pm):
+    """A gang CU must see all its chips; oversize gangs fail cleanly."""
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    ok = pilot.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: len(mesh.devices.flat), n_chips=1, gang=True))
+    assert ok.wait(30) == 1
+    too_big = pilot.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: None, n_chips=99, gang=True))
+    with pytest.raises(RuntimeError):
+        too_big.wait(30)
+
+
+def test_cu_failure_and_retry(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    attempts = []
+
+    def flaky(mesh=None):
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise ValueError("boom")
+        return "recovered"
+
+    cu = pilot.submit(ComputeUnitDescription(fn=flaky, max_retries=3, tag="f"))
+    assert cu.wait(30) == "recovered"
+    assert len(attempts) == 3
+
+    cu2 = pilot.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: 1 / 0, max_retries=1, tag="f2"))
+    with pytest.raises(RuntimeError):
+        cu2.wait(30)
+    assert cu2.state is CUState.FAILED
+
+
+def test_priority_ordering(pm):
+    """Higher-priority CUs schedule first when the pilot is saturated."""
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    order = []
+
+    def task(name, mesh=None):
+        order.append(name)
+        time.sleep(0.05)
+        return name
+
+    blocker = pilot.submit(ComputeUnitDescription(
+        fn=task, args=("blocker",), n_chips=1))
+    time.sleep(0.02)  # let it start
+    low = pilot.submit(ComputeUnitDescription(
+        fn=task, args=("low",), n_chips=1, priority=0))
+    high = pilot.submit(ComputeUnitDescription(
+        fn=task, args=("high",), n_chips=1, priority=10))
+    blocker.wait(30), low.wait(30), high.wait(30)
+    assert order.index("high") < order.index("low")
+
+
+def test_app_master_reuse_stats(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1, reuse_app_master=True))
+    for _ in range(5):
+        pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: 1, app_id="app1")).wait(30)
+    stats = pilot.agent.scheduler.stats
+    assert stats["app_masters_started"] == 1
+    assert stats["app_masters_reused"] >= 4
+
+
+def test_mode1_spawn_and_return_chips(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    assert pilot.agent.scheduler.n_free == 1
+    cluster = pilot.spawn_analytics_cluster(1)
+    assert pilot.agent.scheduler.n_free == 0
+    assert cluster.mesh.size == 1
+    cluster.shutdown()
+    assert pilot.agent.scheduler.n_free == 1
+
+
+def test_mode2_hpc_in_analytics_cluster(pm):
+    from repro.core.modes import AnalyticsCluster
+    cluster = AnalyticsCluster(jax.devices()[:1])
+
+    def hpc_stage(mesh=None):
+        with mesh:
+            return float(jnp.sum(jnp.ones((4, 4))))
+
+    assert cluster.run_hpc(hpc_stage) == 16.0
+
+
+def test_straggler_speculation():
+    """A CU overrunning its tag's EMA gets a speculative duplicate
+    (requires a spare slot — two logical slots on the one real device)."""
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm2 = PilotManager(rm)
+    try:
+        pilot = pm2.submit(PilotDescription(n_chips=2))
+        agent = pilot.agent
+
+        def fast(mesh=None):
+            time.sleep(0.01)
+            return "ok"
+
+        for _ in range(3):  # build the EMA
+            pilot.submit(ComputeUnitDescription(
+                fn=fast, tag="work", needs_mesh=False)).wait(30)
+
+        slow_gate = {"sleep": 2.5}
+
+        def maybe_slow(mesh=None):
+            s = slow_gate["sleep"]
+            slow_gate["sleep"] = 0.0  # the speculative copy is fast
+            time.sleep(s)
+            return "done"
+
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=maybe_slow, tag="work", needs_mesh=False))
+        result = cu.wait(30)
+        assert result == "done"
+        spec = [c for c in agent._cus.values() if c.speculative_of == cu.uid]
+        assert spec, "no speculative duplicate was launched"
+        # the speculative copy finished first and resolved the original
+        assert cu.runtime_s() < 2.4
+    finally:
+        pm2.shutdown()
+
+
+def test_device_failure_requeues_cu(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    dev = pilot.devices[0]
+    impacted = pilot.fail_device(dev)
+    assert isinstance(impacted, list)
+    assert len(pilot.devices) == 0
+
+
+def test_elastic_resize(pm):
+    pilot = pm.submit(PilotDescription(n_chips=1))
+    pilot.resize(1)
+    assert len(pilot.devices) == 1
+    assert pilot.agent.scheduler.n_free >= 1
+
+
+def test_locality_preference(pm):
+    """CUs with data deps prefer the pilot holding the data."""
+    from repro.core import UnitManager
+    p1 = pm.submit(PilotDescription(n_chips=1))
+    # p1 holds the data
+    arr = jax.device_put(jnp.ones((128,)), p1.devices[0])
+    p1.data.put("ds", arr)
+    um = UnitManager([p1])
+    cu = um.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: "ran", data=("ds",), tag="loc"))
+    assert cu.wait(30) == "ran"
+    assert p1.agent.scheduler.stats["locality_hits"] >= 1

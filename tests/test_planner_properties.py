@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the sharding planner's invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer
+from repro.sharding.planner import Plan
+
+
+def make_plan(data=16, model=16, pod=0, **kw):
+    axes = {"pod": pod, "data": data, "model": model} if pod else \
+        {"data": data, "model": model}
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    return Plan(mesh_axes=axes, dp_axes=dp, **kw)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.sampled_from([1, 2, 4, 8, 16]),
+       model=st.sampled_from([1, 2, 4, 8, 16]),
+       arch=st.sampled_from(configs.names()))
+def test_param_specs_always_valid(data, model, arch):
+    """Every produced spec divides its dim — for any mesh and any arch
+    (the divisibility-fallback invariant)."""
+    cfg = configs.get_smoke(arch)
+    params = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.key(0)))
+    plan = make_plan(data, model)
+    specs = plan.param_specs(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                assert dim % plan.mesh_axes[a] == 0, (arch, leaf.shape, spec)
+
+
+@settings(max_examples=30, deadline=None)
+@given(batch=st.integers(1, 512), data=st.sampled_from([2, 4, 8, 16]),
+       pod=st.sampled_from([0, 2]))
+def test_batch_spec_divisibility(batch, data, pod):
+    plan = make_plan(data=data, pod=pod)
+    spec = plan.batch_specs({"x": jax.ShapeDtypeStruct((batch, 8), jnp.int32)})
+    axes = spec["x"][0]
+    if axes:
+        if isinstance(axes, str):  # P canonicalizes singleton tuples
+            axes = (axes,)
+        prod = 1
+        for a in axes:
+            prod *= plan.mesh_axes[a]
+        assert batch % prod == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(configs.names()),
+       batch=st.sampled_from([1, 4, 16, 128]),
+       seq=st.sampled_from([64, 2048]))
+def test_cache_specs_always_valid(arch, batch, seq):
+    cfg = configs.get_smoke(arch)
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, seq,
+                                        seq if cfg.is_encoder_decoder else 0))
+    plan = make_plan()
+    specs = plan.cache_specs(cfg, caches)
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(caches),
+            jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                assert dim % plan.mesh_axes[a] == 0, (arch, leaf.shape, spec)
+
+
+def test_serving_plan_drops_fsdp_only_with_tp():
+    """Weight-stationary mode: TP leaves lose FSDP; non-TP leaves keep it."""
+    cfg = configs.get_smoke("deepseek-67b")
+    params = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.key(0)))
+    train = make_plan().param_specs(params)
+    serve = make_plan(serving=True).param_specs(params)
+    t_leaves = jax.tree_util.tree_leaves(train, is_leaf=lambda x: isinstance(x, P))
+    s_leaves = jax.tree_util.tree_leaves(serve, is_leaf=lambda x: isinstance(x, P))
+    changed = 0
+    for t, s in zip(t_leaves, s_leaves):
+        if "model" in t and "data" in t:
+            assert "data" not in s and "model" in s
+            changed += 1
+        else:
+            assert t == s
+    assert changed > 0

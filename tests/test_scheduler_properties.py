@@ -1,0 +1,140 @@
+"""Hypothesis property tests for the YARN-style scheduler's invariants."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compute_unit import ComputeUnit, ComputeUnitDescription, CUState
+from repro.core.scheduler import YarnStyleScheduler
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.i = i
+        self.platform = "fake"
+
+
+def make_sched(n=8, hbm=16, reuse=True):
+    return YarnStyleScheduler([FakeDevice(i) for i in range(n)], hbm,
+                              reuse_app_master=reuse,
+                              locality_delay_rounds=0)
+
+
+def drain(sched):
+    """Run scheduling rounds to a fixed point, releasing as we go."""
+    done = []
+    for _ in range(1000):
+        bound = sched.try_schedule()
+        if not bound:
+            break
+        for cu, idxs in bound:
+            done.append((cu, idxs))
+            cu._set_state(CUState.DONE)
+            sched.release(cu)
+    return done
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 8), st.booleans()), min_size=1,
+                max_size=30))
+def test_all_feasible_cus_eventually_schedule(reqs):
+    """Every CU whose gang fits the pilot is eventually scheduled,
+    regardless of arrival order (no starvation at fixed point)."""
+    sched = make_sched(8)
+    cus = []
+    for chips, gang in reqs:
+        cu = ComputeUnit(ComputeUnitDescription(
+            fn=lambda: None, n_chips=chips, gang=gang))
+        sched.submit(cu)
+        cus.append(cu)
+    done = drain(sched)
+    assert len(done) == len(cus)
+    # all slots returned
+    assert sched.n_free == 8
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=20),
+       st.integers(1, 8))
+def test_no_slot_oversubscription(chip_reqs, n_devices):
+    """At any instant, bound chips never exceed the pilot's total."""
+    sched = make_sched(n_devices)
+    for c in chip_reqs:
+        if c <= n_devices:
+            sched.submit(ComputeUnit(ComputeUnitDescription(
+                fn=lambda: None, n_chips=c)))
+    in_flight = []
+    total_bound = 0
+    for _ in range(200):
+        bound = sched.try_schedule()
+        for cu, idxs in bound:
+            assert len(idxs) == cu.desc.n_chips
+            in_flight.append((cu, set(idxs)))
+        # invariant: no device assigned twice
+        all_idxs = [i for _, s in in_flight for i in s]
+        assert len(all_idxs) == len(set(all_idxs)), "device double-booked"
+        assert len(all_idxs) + sched.n_free == n_devices
+        if in_flight:
+            cu, _ = in_flight.pop(0)
+            cu._set_state(CUState.DONE)
+            sched.release(cu)
+            total_bound += 1
+        elif not bound:
+            break
+    assert sched.n_free == n_devices
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=12))
+def test_priority_respected_within_round(priorities):
+    """When slots are scarce, strictly higher priorities bind first."""
+    sched = make_sched(1)
+    cus = []
+    for p in priorities:
+        cu = ComputeUnit(ComputeUnitDescription(
+            fn=lambda: None, n_chips=1, priority=p))
+        sched.submit(cu)
+        cus.append(cu)
+    scheduled_order = []
+    for _ in range(len(cus) * 3):
+        bound = sched.try_schedule()
+        for cu, _ in bound:
+            scheduled_order.append(cu.desc.priority)
+            cu._set_state(CUState.DONE)
+            sched.release(cu)
+        if len(scheduled_order) == len(cus):
+            break
+    assert scheduled_order == sorted(priorities, reverse=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 7))
+def test_device_removal_keeps_accounting(n, n_remove):
+    sched = make_sched(n)
+    n_remove = min(n_remove, n)
+    sched.remove_devices(list(range(n_remove)))
+    assert sched.n_free == n - n_remove
+    # remaining capacity still schedulable
+    if n - n_remove > 0:
+        cu = ComputeUnit(ComputeUnitDescription(fn=lambda: None,
+                                                n_chips=n - n_remove))
+        sched.submit(cu)
+        assert len(drain(sched)) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=1, max_size=10))
+def test_memory_slots_respected(mem_reqs):
+    """HBM slot accounting: per-chip memory never oversubscribed."""
+    hbm = 16
+    sched = make_sched(2, hbm=hbm)
+    for m in mem_reqs:
+        sched.submit(ComputeUnit(ComputeUnitDescription(
+            fn=lambda: None, n_chips=1, memory_bytes=m)))
+    bound = sched.try_schedule()
+    used = {}
+    for cu, idxs in bound:
+        for i in idxs:
+            used[i] = used.get(i, 0) + cu.desc.memory_bytes
+    for i, u in used.items():
+        assert u <= hbm

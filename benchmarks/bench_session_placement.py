@@ -1,0 +1,101 @@
+"""Fig-8 analogue: the locality-vs-movement trade-off as a placement sweep.
+
+The paper compares running analytics where the data lives (local disk)
+against moving it through Lustre.  The Session makes that a per-stage
+placement decision: ``affinity + locality − movement_cost``.  Sweeping
+the inter-pilot (DCN) per-byte cost and the dataset size traces the
+crossover: cheap links consolidate the analytics stage onto its native
+pilot (moving the data); expensive links pin it to the data-resident
+HPC pilot via a Mode-I carve-out (moving nothing).
+
+    PYTHONPATH=src python benchmarks/bench_session_placement.py
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.analytics import kmeans as km
+from repro.core import (PilotDescription, ResourceManager, Session,
+                        TransferCostModel, analytics_stage, hpc_stage)
+from repro.core.dataplane import Link
+
+DCN_COSTS = (0.0, 1e-9, 1e-7, 1e-5, 1e-3, 1.0)   # per-byte sweep
+N_POINTS = (1024, 16384)                          # dataset sizes (rows, d=4)
+K = 8
+
+
+def run_one(dcn_cost: float, n_points: int) -> Dict:
+    rm = ResourceManager(devices=jax.devices() * 2)
+    session = Session(rm, cost_model=TransferCostModel(
+        dcn_cost_per_byte=dcn_cost))
+    session.add_pilot(PilotDescription(n_chips=1, name="hpc", runtime="hpc"))
+    session.add_pilot(PilotDescription(n_chips=1, name="ana",
+                                       runtime="analytics"))
+
+    def simulate(mesh=None):
+        return {"pts": np.asarray(
+            km.make_dataset(n_points, 4, n_clusters=K, seed=0), np.float32)}
+
+    def analyze(engine=None, pts=None):
+        _, cost = km.kmeans_fit(engine, "pts", K, iters=2)
+        return {"cost": cost}
+
+    t0 = time.monotonic()
+    session.run([
+        hpc_stage("simulate", simulate, outputs=("pts",)),
+        analytics_stage("analyze", analyze, inputs=("pts",)),
+    ])
+    wall = time.monotonic() - t0
+    place = session.placements["analyze"]
+    row = {
+        "dcn_cost_per_byte": dcn_cost,
+        "n_points": n_points,
+        "placed_on": place["pilot"],
+        "mode": place["mode"],
+        "dcn_bytes": session.dataplane.moved_by_link(Link.DCN),
+        "ici_bytes": session.dataplane.moved_by_link(Link.ICI),
+        "score_hpc": place["scores"]["hpc"]["total"],
+        "score_ana": place["scores"]["ana"]["total"],
+        "wall_s": wall,
+    }
+    session.shutdown()
+    return row
+
+
+def sweep() -> List[Dict]:
+    return [run_one(c, n) for n in N_POINTS for c in DCN_COSTS]
+
+
+def run() -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'fig8')."""
+    return [{"name": (f"fig8/n{r['n_points']}/"
+                      f"dcn{r['dcn_cost_per_byte']:.0e}"),
+             "us_per_call": r["wall_s"] * 1e6,
+             "derived": (f"placed={r['placed_on']} mode={r['mode']} "
+                         f"dcn_B={r['dcn_bytes']} ici_B={r['ici_bytes']}")}
+            for r in sweep()]
+
+
+def main() -> None:
+    rows = sweep()
+    hdr = (f"{'dcn $/B':>10} {'points':>7} {'placed_on':>9} {'mode':>12} "
+           f"{'dcn_B':>9} {'ici_B':>9} {'score_hpc':>10} {'score_ana':>10} "
+           f"{'wall_s':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['dcn_cost_per_byte']:>10.1e} {r['n_points']:>7d} "
+              f"{r['placed_on']:>9} {r['mode']:>12} {r['dcn_bytes']:>9d} "
+              f"{r['ici_bytes']:>9d} {r['score_hpc']:>10.3f} "
+              f"{r['score_ana']:>10.3f} {r['wall_s']:>7.3f}")
+    n_local = sum(1 for r in rows if r["placed_on"] == "hpc")
+    print(f"\ncrossover: {n_local}/{len(rows)} placements stayed "
+          f"data-local; the rest consolidated onto the analytics pilot.")
+
+
+if __name__ == "__main__":
+    main()

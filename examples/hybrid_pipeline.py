@@ -1,23 +1,30 @@
-"""The paper's motivating application: a coupled HPC + analytics pipeline
-on ONE pilot (Mode I), with the analytics result steering the next HPC
-stage — the molecular-dynamics 'simulate, cluster trajectories, refine'
-loop, realized as 'train, cluster activations, adapt'.
+"""The paper's motivating application as a Session stage DAG.
 
-    PYTHONPATH=src python examples/hybrid_pipeline.py
+The molecular-dynamics 'simulate, cluster trajectories, refine' loop,
+realized as 'train, cluster activations, adapt' — now expressed as
+named stages with data dependencies, placed by the Session across TWO
+heterogeneous pilots (an HPC-runtime pilot and an analytics-runtime
+pilot) by trading data locality against modeled movement cost:
 
-Round structure:
-  HPC stage       train the model N steps (gang CU, all chips)
-  Mode I          carve an analytics cluster from the same allocation
-  analytics stage K-Means over the model's output embeddings (MapReduce)
-  steer           next round's data seed chosen from the cluster balance
+    simulate (hpc)  --traj-->  analyze (analytics)  --centroids-->  train (hpc)
+
+With the default cost model the tiny trajectory moves cheaply, so the
+analytics stage consolidates onto the analytics pilot; raise
+``--dcn-cost`` and the placer keeps it on the data-resident HPC pilot
+via a Mode-I carve-out instead (0 inter-pilot bytes).  Run:
+
+    PYTHONPATH=src python examples/hybrid_pipeline.py [--dcn-cost 1.0]
 """
+import argparse
+
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.analytics import kmeans as km
-from repro.core import ComputeUnitDescription, PilotDescription, PilotManager
+from repro.core import (PilotDescription, ResourceManager, Session,
+                        TransferCostModel, analytics_stage, hpc_stage)
+from repro.core.dataplane import Link
 from repro.data.batches import make_batch
 from repro.models import transformer
 from repro.optim import adamw
@@ -27,15 +34,30 @@ ROUNDS = 3
 STEPS_PER_ROUND = 10
 K = 4
 
-pm = PilotManager()
-pilot = pm.submit(PilotDescription(n_chips=1, name="hybrid"))
-cfg = configs.get_smoke("hymba-1.5b")
+parser = argparse.ArgumentParser()
+parser.add_argument("--dcn-cost", type=float, default=None,
+                    help="inter-pilot cost per byte (default: model default)")
+args = parser.parse_args()
 
+cost_model = TransferCostModel()
+if args.dcn_cost is not None:
+    cost_model.dcn_cost_per_byte = args.dcn_cost
+
+# two pilots over one device pool (dry-run: logical slots alias the CPU)
+session = Session(ResourceManager(devices=jax.devices() * 2),
+                  cost_model=cost_model)
+session.add_pilot(PilotDescription(n_chips=1, name="hpc", runtime="hpc"))
+session.add_pilot(PilotDescription(n_chips=1, name="ana", runtime="analytics"))
+
+cfg = configs.get_smoke("hymba-1.5b")
 trainer_box = {}
-seed = 0
-for rnd in range(ROUNDS):
-    # ---- HPC stage: gang-scheduled training CU ------------------------
-    def hpc_stage(seed=seed, mesh=None):
+
+
+def make_round(rnd: int):
+    """One round of the DAG: simulate -> analyze -> train(steered)."""
+
+    def simulate(mesh=None, results=None):
+        seed = results.get(f"train-{rnd - 1}", 0) if results else 0
         tr = trainer_box.get("tr")
         if tr is None:
             tr = Trainer(cfg, mesh, global_batch=4, seq=32,
@@ -43,34 +65,44 @@ for rnd in range(ROUNDS):
             trainer_box["tr"] = tr
         tr.pipeline.seed = seed
         hist = tr.run((rnd + 1) * STEPS_PER_ROUND, log_every=0)
+        trainer_box["loss"] = hist[-1]["loss"]
         # 'trajectory' data: output logits of a probe batch, 3 features
         rng = np.random.default_rng(seed)
         probe = make_batch(cfg, "train", 4, 32, rng)
         logits, _ = transformer.forward(cfg, tr.state["params"], probe,
                                         remat=False)
-        traj = np.asarray(logits.reshape(-1, logits.shape[-1])[:, :3],
-                          np.float32)
-        return hist[-1]["loss"], traj
+        return {"traj": np.asarray(
+            logits.reshape(-1, logits.shape[-1])[:, :3], np.float32)}
 
-    cu = pilot.submit(ComputeUnitDescription(
-        fn=hpc_stage, gang=True, n_chips=1, tag="sim"))
-    loss, traj = cu.wait(600)
+    def analyze(engine=None, traj=None):
+        centroids, cost = km.kmeans_fit(engine, "traj", K, iters=3)
+        return {"centroids": centroids, "cost": cost}
 
-    # ---- Mode I: analytics stage on the same allocation ----------------
-    cluster = pilot.spawn_analytics_cluster(1)
-    cluster.engine.put("traj", traj)
-    centroids, cost = km.kmeans_fit(cluster.engine, "traj", K, iters=3)
-    sizes = np.bincount(
-        np.asarray(km.assign_partials(jnp.asarray(traj),
-                                      centroids)[1] > 0).astype(int),
-        minlength=2)
-    cluster.shutdown()
+    def train(centroids=None, results=None, mesh=None):
+        # steer: next round's data seed chosen from the cluster cost
+        return int(results[f"analyze-{rnd}"]["cost"]) % 997
 
-    # ---- steer the next round ------------------------------------------
-    seed = int(cost) % 997
-    print(f"round {rnd}: train loss {loss:.3f} | kmeans cost {cost:.1f} "
-          f"on {traj.shape[0]} trajectory points | next seed {seed} "
-          f"(chips returned: {pilot.agent.scheduler.n_free})")
+    return [
+        hpc_stage(f"simulate-{rnd}", simulate, outputs=("traj",)),
+        analytics_stage(f"analyze-{rnd}", analyze, inputs=("traj",),
+                        outputs=("centroids",)),
+        hpc_stage(f"train-{rnd}", train, inputs=("centroids",),
+                  after=(f"analyze-{rnd}",)),
+    ]
 
-pm.shutdown()
+
+for rnd in range(ROUNDS):
+    session.run(make_round(rnd))
+    place = session.placements[f"analyze-{rnd}"]
+    print(f"round {rnd}: train loss {trainer_box['loss']:.3f} | "
+          f"kmeans cost {session.results[f'analyze-{rnd}']['cost']:.1f} | "
+          f"analytics placed on '{place['pilot']}' ({place['mode']}) | "
+          f"dcn moved {place['dcn_bytes_moved']} B | "
+          f"next seed {session.results[f'train-{rnd}']}")
+
+ledger = session.dataplane.ledger()
+print(f"data-plane ledger: total {ledger['total']} B moved, "
+      f"dcn {ledger['by_link'][Link.DCN]} B, "
+      f"ici {ledger['by_link'][Link.ICI]} B")
+session.shutdown()
 print("pipeline complete.")

@@ -24,15 +24,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.pilot_data import PilotDataRegistry
+from repro.compat import shard_map
+from repro.core.dataplane import DataPlane, Link
 
 
 class AnalyticsEngine:
-    def __init__(self, mesh: Mesh, data: Optional[PilotDataRegistry] = None,
+    def __init__(self, mesh: Mesh, data: Optional[DataPlane] = None,
                  axis: str = "data"):
         self.mesh = mesh
         self.axis = axis
-        self.data = data or PilotDataRegistry()
+        self.data = data or DataPlane()
         self._exec_cache: dict[Any, Any] = {}
 
     # ------------------------------------------------------------- dataset
@@ -51,8 +52,8 @@ class AnalyticsEngine:
     def map_blocks(self, fn: Callable, name: str, out_name: str) -> jax.Array:
         """Shard-local map (Hadoop map phase; zero communication)."""
         x = self.ensure_local(name)
-        mapped = jax.shard_map(fn, mesh=self.mesh, in_specs=P(self.axis),
-                               out_specs=P(self.axis), check_vma=False)(x)
+        mapped = shard_map(fn, mesh=self.mesh, in_specs=P(self.axis),
+                           out_specs=P(self.axis), check_vma=False)(x)
         self.data.put(out_name, mapped)
         return mapped
 
@@ -76,7 +77,7 @@ class AnalyticsEngine:
                     lambda t: jax.lax.psum(t, self.axis), partial)
 
             extra_specs = tuple(P() for _ in extra_args)
-            fn = jax.jit(jax.shard_map(
+            fn = jax.jit(shard_map(
                 shard_fn, mesh=self.mesh,
                 in_specs=(P(self.axis),) + extra_specs,
                 out_specs=P(), check_vma=False))
@@ -91,7 +92,8 @@ class AnalyticsEngine:
         want = self.block_sharding()
         if pd.array.sharding == want:
             return pd.array
-        return self.data.reshard_to(name, want)
+        return self.data.reshard_to(name, want, link=Link.ICI,
+                                    reason="ensure-local")
 
     def global_reshard(self, name: str, spool_dir: str = "/tmp") -> jax.Array:
         """Global-FS path (Lustre analogue): per the paper, hybrid stages
@@ -108,9 +110,9 @@ class AnalyticsEngine:
         try:
             with os.fdopen(fd, "wb") as f:             # persist ...
                 np.save(f, host)
-            self.data._moved_bytes += pd.nbytes
+            self.data.record_moved(pd.nbytes, Link.GFS, "gfs-spool-write")
             reread = np.load(path)                     # ... and re-read
-            self.data._moved_bytes += pd.nbytes
+            self.data.record_moved(pd.nbytes, Link.GFS, "gfs-spool-read")
         finally:
             os.unlink(path)
         re_blocked = jax.device_put(reread, self.block_sharding())

@@ -1,16 +1,21 @@
 """Pilot-Abstraction core (the paper's contribution, adapted to TPU/JAX).
 
-Multi-level scheduling: a ``Pilot`` acquires a device slice from the
-``ResourceManager`` (system level); its ``Agent`` then multiplexes
-``ComputeUnit``s onto that slice through a YARN-style slot scheduler
-(application level) — with data locality (``PilotData``), gang
-scheduling, two-phase admission with AppMaster reuse, straggler
-speculation and elastic resize.
+Multi-level scheduling: a ``Session`` (application level) places whole
+stages across heterogeneous ``Pilot``s by trading data locality against
+modeled movement cost over the shared ``DataPlane``; each Pilot acquires
+a device slice from the ``ResourceManager`` (system level); its
+``Agent`` then multiplexes ``ComputeUnit``s onto that slice through a
+YARN-style slot scheduler — with data locality, gang scheduling,
+two-phase admission with AppMaster reuse, straggler speculation and
+elastic resize.  See DESIGN.md for the full architecture map.
 """
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState  # noqa: F401
+from .dataplane import (DataPlane, Lineage, Link, PilotData,  # noqa: F401
+                        PilotDataRegistry, TransferCostModel)
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401
-from .pilot_data import PilotData, PilotDataRegistry  # noqa: F401
 from .resource_manager import ResourceManager  # noqa: F401
 from .scheduler import YarnStyleScheduler  # noqa: F401
+from .session import (Session, Stage, analytics_stage,  # noqa: F401
+                      hpc_stage)
 from .unit_manager import UnitManager  # noqa: F401
 from . import modes  # noqa: F401

@@ -1,0 +1,268 @@
+"""DataPlane: the shared data substrate under the Session layer.
+
+This is the refactored ``PilotDataRegistry`` (the HDFS-NameNode
+analogue), extended from single-pilot bookkeeping into a cross-pilot
+data plane. It answers the paper's central question — local disk vs
+Lustre, i.e. compute where the data lives vs move the data — as a
+queryable runtime model:
+
+  * **placement + replica tracking per pilot**: each named dataset has
+    a home set of pilot uids (who holds a replica) in addition to its
+    device-level sharding.  Device-level locality is the fallback for
+    data that was never attributed to a pilot;
+  * **transfer-cost model**: per-byte costs for the three links of the
+    paper's deployment — intra-pilot ICI reshard (local disk), inter-
+    pilot DCN copy (node-to-node), global-FS spool (Lustre).  The
+    Session's placer compares ``locality_score - movement_cost``;
+  * **lineage**: each dataset can record the stage that produced it and
+    the inputs it was derived from, so a replica lost to device failure
+    can be re-materialized by re-running the producer instead of being
+    gone for good (the HDFS re-replication analogue);
+  * **moved-bytes ledger**: every byte that crosses a link is recorded
+    through the public :meth:`record_moved` — per-link and per-reason —
+    replacing the private ``_moved_bytes`` pokes of the seed code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+
+
+class Link:
+    """The three data paths of the paper's Fig-8 comparison."""
+    ICI = "ici"    # intra-pilot reshard (local-disk path: data stays put)
+    DCN = "dcn"    # inter-pilot copy (node-to-node over the datacenter net)
+    GFS = "gfs"    # global-FS spool (the Lustre path: persist + re-read)
+
+    ALL = (ICI, DCN, GFS)
+
+
+@dataclasses.dataclass
+class TransferCostModel:
+    """Per-byte movement costs (seconds/byte), one per link class.
+
+    Defaults reflect the paper's ordering ICI << DCN << Lustre.  The
+    ``runtime_affinity`` term is the consolidation pull: an analytics
+    stage prefers a long-lived analytics-runtime pilot over paying the
+    Mode-I cluster-spawn overhead inside an HPC pilot — unless moving
+    its inputs there costs more than the affinity is worth. Sweeping
+    ``dcn_cost_per_byte`` (benchmarks/bench_session_placement.py)
+    traces the paper's locality-vs-movement trade-off curve.
+    """
+    ici_cost_per_byte: float = 1e-12
+    dcn_cost_per_byte: float = 2e-10
+    gfs_cost_per_byte: float = 1e-9
+    runtime_affinity: float = 2.0
+
+    def cost_per_byte(self, link: str) -> float:
+        return {Link.ICI: self.ici_cost_per_byte,
+                Link.DCN: self.dcn_cost_per_byte,
+                Link.GFS: self.gfs_cost_per_byte}[link]
+
+    def movement_cost(self, nbytes: int, link: str) -> float:
+        return nbytes * self.cost_per_byte(link)
+
+
+@dataclasses.dataclass
+class Lineage:
+    """How a dataset came to be: producer stage + the inputs it read.
+    The Session resolves the producer callable from its stage registry —
+    storing closures here would pin whole training states in the
+    long-lived DataPlane."""
+    stage: str
+    inputs: Tuple[str, ...] = ()
+
+
+class PilotData:
+    """A named sharded array with known placement (the HDFS-block set)."""
+
+    def __init__(self, name: str, array: jax.Array):
+        self.name = name
+        self.array = array
+
+    @property
+    def nbytes(self) -> int:
+        return self.array.nbytes
+
+    def device_set(self) -> Set:
+        return {d for d in self.array.sharding.device_set}
+
+    def locality(self, devices: Sequence) -> float:
+        """Fraction of this data's devices contained in `devices`."""
+        mine = self.device_set()
+        if not mine:
+            return 1.0
+        return len(mine & set(devices)) / len(mine)
+
+
+class DataPlane:
+    def __init__(self, cost_model: Optional[TransferCostModel] = None):
+        self.cost_model = cost_model or TransferCostModel()
+        self._data: Dict[str, PilotData] = {}
+        self._home: Dict[str, Set[str]] = {}       # name -> pilot uids
+        self._lineage: Dict[str, Lineage] = {}
+        self._moved_bytes = 0
+        self._moved_by_link: Dict[str, int] = {l: 0 for l in Link.ALL}
+        self._moved_by_reason: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- registry
+    def put(self, name: str, array: jax.Array, *,
+            pilot: Optional[str] = None,
+            lineage: Optional[Lineage] = None) -> PilotData:
+        """Register (or replace) a dataset; optionally attribute it to a
+        home pilot and record its lineage."""
+        pd = PilotData(name, array)
+        with self._lock:
+            self._data[name] = pd
+            if pilot is not None:
+                self._home[name] = {pilot}
+            else:
+                self._home.pop(name, None)
+            if lineage is not None:
+                self._lineage[name] = lineage
+        return pd
+
+    def get(self, name: str) -> PilotData:
+        return self._data[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._data
+
+    def names(self) -> List[str]:
+        return list(self._data)
+
+    # ------------------------------------------------------ replica tracking
+    def home_pilots(self, name: str) -> Set[str]:
+        return set(self._home.get(name, ()))
+
+    def add_replica(self, name: str, pilot: str) -> None:
+        with self._lock:
+            self._home.setdefault(name, set()).add(pilot)
+
+    def resident_on(self, name: str, pilot: str) -> Optional[bool]:
+        """True/False if home tracking knows; None if never attributed."""
+        home = self._home.get(name)
+        return None if home is None else pilot in home
+
+    def drop_pilot_replicas(self, pilot: str) -> List[str]:
+        """A pilot's replicas are gone (failure/shutdown). Returns the
+        names left with NO replica — candidates for re-materialization
+        via their lineage (Session.rematerialize)."""
+        lost = []
+        with self._lock:
+            for name, home in self._home.items():
+                home.discard(pilot)
+                if not home:
+                    lost.append(name)
+        return lost
+
+    def lineage_of(self, name: str) -> Optional[Lineage]:
+        return self._lineage.get(name)
+
+    # ------------------------------------------------------------- locality
+    def locality_score(self, names: Sequence[str], devices: Sequence) -> float:
+        """Byte-weighted device-level locality of `names` w.r.t.
+        `devices` (1 = all local). Used by the intra-pilot scheduler."""
+        items = [self._data[n] for n in names if n in self._data]
+        total = sum(p.nbytes for p in items)
+        if not total:
+            return 1.0
+        return sum(p.locality(devices) * p.nbytes for p in items) / total
+
+    def pilot_locality(self, names: Sequence[str], pilot: str,
+                       devices: Sequence = ()) -> float:
+        """Byte-weighted locality of `names` w.r.t. a *pilot*.  Replica
+        tracking wins when present (distinct pilots may alias the same
+        physical devices in dry-runs); device overlap is the fallback."""
+        items = [(n, self._data[n]) for n in names if n in self._data]
+        total = sum(p.nbytes for _, p in items)
+        if not total:
+            return 1.0
+        score = 0.0
+        for n, p in items:
+            res = self.resident_on(n, pilot)
+            frac = p.locality(devices) if res is None else float(res)
+            score += frac * p.nbytes
+        return score / total
+
+    def bytes_nonresident(self, names: Sequence[str], pilot: str,
+                          devices: Sequence = ()) -> int:
+        """Bytes that would have to cross a link to make `names` fully
+        resident on `pilot` — the `bytes` input of the placer's
+        ``movement_cost(bytes, link)`` term."""
+        moved = 0
+        for n in names:
+            if n not in self._data:
+                continue
+            p = self._data[n]
+            res = self.resident_on(n, pilot)
+            frac = p.locality(devices) if res is None else float(res)
+            moved += int(p.nbytes * (1.0 - frac))
+        return moved
+
+    # ------------------------------------------------------------- movement
+    def record_moved(self, nbytes: int, link: str = Link.DCN,
+                     reason: str = "") -> None:
+        """Public ledger entry: `nbytes` crossed `link`.  The ONLY way
+        moved bytes are accounted — callers never touch the counters."""
+        if link not in Link.ALL:
+            raise ValueError(f"unknown link {link!r}; use Link.ICI/DCN/GFS")
+        with self._lock:
+            self._moved_bytes += nbytes
+            self._moved_by_link[link] += nbytes
+            if reason:
+                self._moved_by_reason[reason] = \
+                    self._moved_by_reason.get(reason, 0) + nbytes
+
+    def reshard_to(self, name: str, sharding, *, link: str = Link.ICI,
+                   reason: str = "reshard") -> jax.Array:
+        """Move data to a new placement; bytes recorded on `link`."""
+        pd = self._data[name]
+        if pd.array.sharding == sharding:
+            return pd.array
+        moved = jax.device_put(pd.array, sharding)
+        with self._lock:
+            self._data[name] = PilotData(name, moved)
+        self.record_moved(pd.nbytes, link, reason)
+        return moved
+
+    def move_to_pilot(self, name: str, pilot: str, sharding, *,
+                      link: str = Link.DCN,
+                      reason: str = "") -> Tuple[jax.Array, int]:
+        """Inter-pilot move: reshard onto the target pilot's devices and
+        re-home the dataset there.  Only the non-resident bytes pay the
+        link cost (a replica already on the target moves nothing).
+        Returns (moved array, bytes recorded on `link`)."""
+        pd = self._data[name]
+        nonres = self.bytes_nonresident([name], pilot,
+                                        list(sharding.device_set))
+        moved = jax.device_put(pd.array, sharding)
+        with self._lock:
+            self._data[name] = PilotData(name, moved)
+            self._home[name] = {pilot}
+        if nonres:
+            self.record_moved(nonres, link, reason or f"move:{name}")
+        return moved, nonres
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def moved_bytes(self) -> int:
+        return self._moved_bytes
+
+    def moved_by_link(self, link: str) -> int:
+        return self._moved_by_link.get(link, 0)
+
+    def ledger(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"total": self._moved_bytes,
+                    "by_link": dict(self._moved_by_link),
+                    "by_reason": dict(self._moved_by_reason)}
+
+
+# Backwards-compatible name: the seed's single-pilot registry grew into
+# the cross-pilot DataPlane; old call sites keep working unchanged.
+PilotDataRegistry = DataPlane

@@ -17,7 +17,7 @@ import time
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core.compute_unit import ComputeUnitDescription
-from repro.core.pilot_data import PilotDataRegistry
+from repro.core.dataplane import DataPlane
 
 
 class AnalyticsCluster:
@@ -25,7 +25,7 @@ class AnalyticsCluster:
 
     def __init__(self, devices: Sequence, *, parent=None,
                  reserved_idxs: Sequence[int] = (), tp: int = 1,
-                 data: Optional[PilotDataRegistry] = None):
+                 data: Optional[DataPlane] = None):
         t0 = time.monotonic()
         self.devices = list(devices)
         self.parent = parent

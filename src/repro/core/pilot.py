@@ -20,7 +20,7 @@ import jax
 from jax.sharding import Mesh
 
 from .agent import Agent
-from .pilot_data import PilotDataRegistry
+from .dataplane import DataPlane
 from .resource_manager import ResourceManager
 
 _pilot_counter = itertools.count()
@@ -46,13 +46,13 @@ class PilotDescription:
 
 class Pilot:
     def __init__(self, desc: PilotDescription, rm: ResourceManager,
-                 data_registry: Optional[PilotDataRegistry] = None):
+                 data_registry: Optional[DataPlane] = None):
         self.uid = f"pilot-{next(_pilot_counter):04d}"
         self.desc = desc
         self.rm = rm
         self.state = PilotState.NEW
         self.devices: List = []
-        self.data = data_registry or PilotDataRegistry()
+        self.data = data_registry or DataPlane()
         self.agent: Optional[Agent] = None
         self.timings: Dict[str, float] = {"t_new": time.monotonic()}
         self._lock = threading.Lock()
@@ -140,7 +140,7 @@ class PilotManager:
         self.pilots: List[Pilot] = []
 
     def submit(self, desc: PilotDescription,
-               data_registry: Optional[PilotDataRegistry] = None) -> Pilot:
+               data_registry: Optional[DataPlane] = None) -> Pilot:
         pilot = Pilot(desc, self.rm, data_registry)
         pilot.start()
         self.pilots.append(pilot)

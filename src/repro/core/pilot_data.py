@@ -1,75 +1,16 @@
-"""Pilot-Data: named sharded arrays with known placement (the HDFS-block
-analogue). The scheduler uses placement to score locality — a CU whose
-inputs already live on a candidate device set runs without data movement
-(local-disk path); otherwise the runtime reshards (the Lustre path) and
-records the moved bytes, exposing the paper's locality-vs-movement
-trade-off to the application.
+"""Pilot-Data compatibility shim.
+
+The single-pilot ``PilotDataRegistry`` grew into the cross-pilot
+:class:`~repro.core.dataplane.DataPlane` (placement + replica tracking
+per pilot, transfer-cost model, lineage, public moved-bytes ledger).
+This module keeps the original import path alive; new code should
+import from ``repro.core.dataplane`` directly.
 """
-from __future__ import annotations
-
-import threading
-from typing import Any, Dict, Optional, Sequence, Set
-
-import jax
-
-
-class PilotData:
-    def __init__(self, name: str, array: jax.Array):
-        self.name = name
-        self.array = array
-
-    @property
-    def nbytes(self) -> int:
-        return self.array.nbytes
-
-    def device_set(self) -> Set:
-        return {d for d in self.array.sharding.device_set}
-
-    def locality(self, devices: Sequence) -> float:
-        """Fraction of this data's devices contained in `devices`."""
-        mine = self.device_set()
-        if not mine:
-            return 1.0
-        return len(mine & set(devices)) / len(mine)
-
-
-class PilotDataRegistry:
-    def __init__(self):
-        self._data: Dict[str, PilotData] = {}
-        self._moved_bytes = 0
-        self._lock = threading.Lock()
-
-    def put(self, name: str, array: jax.Array) -> PilotData:
-        pd = PilotData(name, array)
-        with self._lock:
-            self._data[name] = pd
-        return pd
-
-    def get(self, name: str) -> PilotData:
-        return self._data[name]
-
-    def __contains__(self, name: str) -> bool:
-        return name in self._data
-
-    def locality_score(self, names: Sequence[str], devices: Sequence) -> float:
-        """Byte-weighted locality of `names` w.r.t. `devices` (1 = all local)."""
-        items = [self._data[n] for n in names if n in self._data]
-        total = sum(p.nbytes for p in items)
-        if not total:
-            return 1.0
-        return sum(p.locality(devices) * p.nbytes for p in items) / total
-
-    def reshard_to(self, name: str, sharding) -> jax.Array:
-        """Move data to a new placement (the 'Lustre' path); bytes recorded."""
-        pd = self._data[name]
-        if pd.array.sharding == sharding:
-            return pd.array
-        moved = jax.device_put(pd.array, sharding)
-        with self._lock:
-            self._moved_bytes += pd.nbytes
-            self._data[name] = PilotData(name, moved)
-        return moved
-
-    @property
-    def moved_bytes(self) -> int:
-        return self._moved_bytes
+from .dataplane import (  # noqa: F401
+    DataPlane,
+    Lineage,
+    Link,
+    PilotData,
+    PilotDataRegistry,
+    TransferCostModel,
+)

@@ -21,14 +21,14 @@ import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .compute_unit import ComputeUnit, CUState
-from .pilot_data import PilotDataRegistry
+from .dataplane import DataPlane
 
 APP_MASTER_CHIPS = 1  # phase-1 reservation size (YARN AppMaster container)
 
 
 class YarnStyleScheduler:
     def __init__(self, devices: Sequence, hbm_per_chip: int,
-                 data_registry: Optional[PilotDataRegistry] = None, *,
+                 data_registry: Optional[DataPlane] = None, *,
                  reuse_app_master: bool = True,
                  locality_delay_rounds: int = 3,
                  app_master_overhead_s: float = 0.0):
@@ -44,7 +44,7 @@ class YarnStyleScheduler:
         self.reuse_app_master = reuse_app_master
         self.locality_delay_rounds = locality_delay_rounds
         self.app_master_overhead_s = app_master_overhead_s
-        self.data = data_registry or PilotDataRegistry()
+        self.data = data_registry or DataPlane()
         self._lock = threading.Lock()
         self.stats = {"scheduled": 0, "locality_hits": 0, "locality_misses": 0,
                       "app_masters_started": 0, "app_masters_reused": 0}
@@ -71,14 +71,25 @@ class YarnStyleScheduler:
             return None
         if not cu.desc.data:
             return eligible[:need]
-        # locality scoring: prefer chips already holding the CU's data
-        best, best_score = None, -1.0
-        for start in range(0, len(eligible) - need + 1):
-            cand = eligible[start:start + need]
-            score = self.data.locality_score(
-                cu.desc.data, self.devices_of(cand))
-            if score > best_score:
-                best, best_score = cand, score
+        # locality scoring: prefer chips already holding the CU's data.
+        # The byte-weighted locality measure is additive per device, so
+        # ranking eligible devices by the bytes they hold and taking the
+        # top `need` yields the best (possibly non-contiguous) placement.
+        held = {i: 0.0 for i in eligible}
+        for name in cu.desc.data:
+            if name not in self.data:
+                continue
+            pd = self.data.get(name)
+            mine = pd.device_set()
+            if not mine:
+                continue
+            per_dev = pd.nbytes / len(mine)
+            for i in eligible:
+                if self._devices[i] in mine:
+                    held[i] += per_dev
+        best = sorted(eligible, key=lambda i: (-held[i], i))[:need]
+        best_score = self.data.locality_score(
+            cu.desc.data, self.devices_of(best))
         if best_score < 1.0:
             # delay scheduling: skip a few rounds hoping a local slot frees
             skips = self._skip_counts.get(cu.uid, 0)
@@ -88,6 +99,7 @@ class YarnStyleScheduler:
             self.stats["locality_misses"] += 1
         else:
             self.stats["locality_hits"] += 1
+        self._skip_counts.pop(cu.uid, None)  # scheduled: drop delay state
         return best
 
     def _admit(self, cu: ComputeUnit) -> Optional[List[int]]:

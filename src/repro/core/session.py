@@ -1,0 +1,346 @@
+"""Session: the application-facing unifying resource layer.
+
+The paper's pilot abstraction promises "a unified resource layer over
+heterogeneous allocations" — HPC stages and analytics stages of one
+application, coupled through shared data.  The seed code answered the
+locality-vs-movement question only *within* a single pilot (scheduler
+delay scheduling, `ensure_local`).  The Session answers it *across*
+pilots:
+
+  * owns a :class:`PilotManager` and registers heterogeneous pilots —
+    ``runtime='hpc'`` (gang-scheduled MPI-like stages) and
+    ``runtime='analytics'`` (long-lived MapReduce runtime, Mode II);
+    all pilots share ONE :class:`DataPlane`;
+  * executes a **stage DAG** (:func:`hpc_stage` / :func:`analytics_stage`
+    nodes with named data dependencies) asynchronously via futures —
+    a stage becomes ready when its producers finish;
+  * a **placer** scores each ready stage on every compatible pilot as
+
+        affinity + locality_score − movement_cost(bytes, link)
+
+    where affinity is the consolidation pull toward a native-runtime
+    pilot, locality is the DataPlane's byte-weighted replica score, and
+    movement_cost prices the non-resident bytes over the inter-pilot
+    DCN link.  The stage then either runs where its data lives (an
+    analytics stage on an HPC pilot carves a Mode-I cluster) or the
+    data moves — the paper's Fig-8 local-disk-vs-Lustre trade-off as a
+    first-class, queryable runtime decision (``session.placements``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .compute_unit import ComputeUnitDescription
+from .dataplane import DataPlane, Lineage, Link, TransferCostModel
+from .pilot import Pilot, PilotDescription, PilotManager
+from .resource_manager import ResourceManager
+
+HPC = "hpc"
+ANALYTICS = "analytics"
+
+
+@dataclasses.dataclass
+class Stage:
+    """One node of the application DAG.
+
+    ``fn`` is called with keyword arguments: each declared input name
+    bound to its (locality-ensured) array, plus — when the signature
+    accepts them — ``mesh`` (HPC stages), ``engine`` (analytics stages)
+    and ``results`` (dict of completed stages' return values).  The
+    return value is stored under ``session.run(...)[name]``; array
+    entries of a dict return that match ``outputs`` are published to
+    the DataPlane with lineage.
+    """
+    name: str
+    fn: Callable[..., Any]
+    kind: str                           # HPC | ANALYTICS
+    inputs: Tuple[str, ...] = ()        # DataPlane names this stage reads
+    outputs: Tuple[str, ...] = ()       # DataPlane names this stage produces
+    after: Tuple[str, ...] = ()         # extra control deps (stage names)
+    n_chips: Optional[int] = None       # default: the whole pilot
+    pilot: Optional[str] = None         # pin to a pilot by name (optional)
+    gang: bool = True
+
+
+def hpc_stage(name: str, fn: Callable, **kw) -> Stage:
+    """An MPI-like stage: gang-scheduled CU on an HPC-runtime pilot."""
+    return Stage(name=name, fn=fn, kind=HPC, **kw)
+
+
+def analytics_stage(name: str, fn: Callable, **kw) -> Stage:
+    """A MapReduce-like stage: runs natively on an analytics-runtime
+    pilot, or via a Mode-I carve-out inside an HPC pilot."""
+    return Stage(name=name, fn=fn, kind=ANALYTICS, **kw)
+
+
+class Session:
+    def __init__(self, rm: Optional[ResourceManager] = None, *,
+                 cost_model: Optional[TransferCostModel] = None):
+        self.cost_model = cost_model or TransferCostModel()
+        self.dataplane = DataPlane(cost_model=self.cost_model)
+        self.pm = PilotManager(rm)
+        self.pilots: Dict[str, Pilot] = {}          # pilot name -> Pilot
+        self.results: Dict[str, Any] = {}           # stage name -> return
+        self.placements: Dict[str, Dict[str, Any]] = {}
+        self._stages: Dict[str, Stage] = {}         # for rematerialization
+        self._engines: Dict[str, Any] = {}          # pilot uid -> engine
+        self._lock = threading.Lock()
+        self._move_lock = threading.Lock()          # serializes input moves
+
+    # -------------------------------------------------------------- pilots
+    def add_pilot(self, desc: PilotDescription) -> Pilot:
+        """Register a pilot; all Session pilots share the DataPlane."""
+        if desc.name in self.pilots:
+            raise ValueError(f"pilot name {desc.name!r} already registered "
+                             "(names key the placer's candidate set)")
+        pilot = self.pm.submit(desc, data_registry=self.dataplane)
+        self.pilots[desc.name] = pilot
+        return pilot
+
+    def pilots_by_runtime(self, runtime: str) -> List[Pilot]:
+        return [p for p in self.pilots.values() if p.desc.runtime == runtime]
+
+    def shutdown(self) -> None:
+        self.pm.shutdown()
+
+    # -------------------------------------------------------------- placer
+    def _compatible(self, stage: Stage) -> List[Pilot]:
+        if stage.pilot is not None:
+            return [self.pilots[stage.pilot]]
+        if stage.kind == HPC:
+            return self.pilots_by_runtime(HPC)
+        return list(self.pilots.values())   # analytics: native or Mode I
+
+    def score(self, stage: Stage, pilot: Pilot) -> Dict[str, float]:
+        """The placer objective, reported term by term."""
+        loc = self.dataplane.pilot_locality(stage.inputs, pilot.uid,
+                                            pilot.devices)
+        nbytes = self.dataplane.bytes_nonresident(stage.inputs, pilot.uid,
+                                                  pilot.devices)
+        move = self.cost_model.movement_cost(nbytes, Link.DCN)
+        affinity = (self.cost_model.runtime_affinity
+                    if pilot.desc.runtime == stage.kind else 0.0)
+        return {"locality": loc, "bytes_to_move": float(nbytes),
+                "movement_cost": move, "affinity": affinity,
+                "total": affinity + loc - move}
+
+    def place(self, stage: Stage) -> Tuple[Pilot, Dict[str, Any]]:
+        cands = self._compatible(stage)
+        if not cands:
+            raise RuntimeError(
+                f"no compatible pilot for {stage.kind} stage {stage.name!r}")
+        scored = [(self.score(stage, p), p) for p in cands]
+        best_score, best = max(scored, key=lambda sp: sp[0]["total"])
+        decision = {"pilot": best.desc.name, "pilot_uid": best.uid,
+                    "scores": {p.desc.name: s for s, p in scored},
+                    "chosen": best_score}
+        return best, decision
+
+    # ----------------------------------------------------------------- DAG
+    @staticmethod
+    def _producers(stages: Sequence[Stage]) -> Dict[str, List[str]]:
+        """Stage name -> names of stages it depends on (data + control)."""
+        by_output: Dict[str, str] = {}
+        for s in stages:
+            for out in s.outputs:
+                if out in by_output:
+                    raise ValueError(f"output {out!r} produced twice")
+                by_output[out] = s.name
+        deps: Dict[str, List[str]] = {}
+        for s in stages:
+            d = [by_output[i] for i in s.inputs if i in by_output]
+            d += [a for a in s.after]
+            deps[s.name] = sorted(set(d))
+        return deps
+
+    @staticmethod
+    def _topo_order(stages: Sequence[Stage],
+                    deps: Dict[str, List[str]]) -> List[Stage]:
+        by_name = {s.name: s for s in stages}
+        order, seen, visiting = [], set(), set()
+
+        def visit(name: str) -> None:
+            if name in seen:
+                return
+            if name in visiting:
+                raise ValueError(f"stage DAG has a cycle through {name!r}")
+            visiting.add(name)
+            for d in deps.get(name, ()):
+                if d in by_name:
+                    visit(d)
+            visiting.discard(name)
+            seen.add(name)
+            order.append(by_name[name])
+
+        for s in stages:
+            visit(s.name)
+        return order
+
+    def submit_dag(self, stages: Sequence[Stage], *,
+                   timeout: float = 600.0) -> Dict[str, Future]:
+        """Launch the DAG; returns one future per stage (async API)."""
+        known = {s.name for s in stages} | set(self.results)
+        for s in stages:
+            bad = [a for a in s.after if a not in known]
+            if bad:
+                raise ValueError(
+                    f"stage {s.name!r} waits on unknown stage(s) {bad}")
+        deps = self._producers(stages)
+        ordered = self._topo_order(stages, deps)
+        with self._lock:
+            for s in ordered:
+                self._stages[s.name] = s
+        ex = ThreadPoolExecutor(max_workers=max(4, len(ordered)),
+                                thread_name_prefix="session-stage")
+        futures: Dict[str, Future] = {}
+        for s in ordered:
+            dep_futs = [futures[d] for d in deps[s.name] if d in futures]
+            futures[s.name] = ex.submit(self._run_stage, s, dep_futs, timeout)
+        ex.shutdown(wait=False)
+        return futures
+
+    def run(self, stages: Sequence[Stage], *,
+            timeout: float = 600.0) -> Dict[str, Any]:
+        """Execute the DAG to completion; returns stage name -> result."""
+        futures = self.submit_dag(stages, timeout=timeout)
+        return {name: f.result(timeout) for name, f in futures.items()}
+
+    # ------------------------------------------------------------ execution
+    def _run_stage(self, stage: Stage, dep_futs: Sequence[Future],
+                   timeout: float) -> Any:
+        for f in dep_futs:                     # propagate producer failures
+            f.result(timeout)
+        pilot, decision = self.place(stage)
+        self._ensure_inputs_on(stage, pilot, decision)
+        if stage.kind == HPC:
+            result = self._run_hpc(stage, pilot, timeout)
+        else:
+            result = self._run_analytics(stage, pilot, decision, timeout)
+        self._store_outputs(stage, pilot, result)
+        with self._lock:
+            self.results[stage.name] = result
+            self.placements[stage.name] = decision
+        return result
+
+    def _ensure_inputs_on(self, stage: Stage, pilot: Pilot,
+                          decision: Dict[str, Any]) -> None:
+        """Movement side of the placement decision: any input not
+        resident on the chosen pilot crosses the DCN link (recorded)."""
+        moved = 0
+        for name in stage.inputs:
+            if name not in self.dataplane:
+                raise KeyError(f"stage {stage.name!r} input {name!r} "
+                               "not in DataPlane")
+            # serialize check-then-move: concurrent consumer stages must
+            # not double-move (and double-count) a shared input
+            with self._move_lock:
+                if self.dataplane.resident_on(name, pilot.uid) is False:
+                    sharding = NamedSharding(pilot.mesh(), P())
+                    _, nbytes = self.dataplane.move_to_pilot(
+                        name, pilot.uid, sharding, link=Link.DCN,
+                        reason=f"stage:{stage.name}")
+                    moved += nbytes
+        decision["dcn_bytes_moved"] = moved
+
+    def _call_kwargs(self, stage: Stage, extra: Dict[str, Any]) -> Dict[str, Any]:
+        kwargs = {n: self.dataplane.get(n).array for n in stage.inputs}
+        params = inspect.signature(stage.fn).parameters
+        has_var = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                      for p in params.values())
+        for k, v in extra.items():
+            if has_var or k in params:
+                kwargs[k] = v
+        if has_var or "results" in params:
+            with self._lock:
+                kwargs["results"] = dict(self.results)
+        return kwargs
+
+    def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float) -> Any:
+        n = stage.n_chips or len(pilot.devices)
+
+        def job(mesh=None):
+            return stage.fn(**self._call_kwargs(stage, {"mesh": mesh}))
+
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=job, gang=stage.gang, n_chips=n, tag=f"stage:{stage.name}",
+            data=tuple(stage.inputs), app_id=f"session:{stage.kind}"))
+        return cu.wait(timeout)
+
+    def _run_analytics(self, stage: Stage, pilot: Pilot,
+                       decision: Dict[str, Any], timeout: float) -> Any:
+        if pilot.desc.runtime == ANALYTICS:
+            engine = self._engine_for(pilot)
+            decision["mode"] = "native"
+
+            def job(mesh=None):
+                return stage.fn(**self._call_kwargs(stage, {"engine": engine}))
+
+            cu = pilot.submit(ComputeUnitDescription(
+                fn=job, gang=stage.gang,
+                n_chips=stage.n_chips or len(pilot.devices),
+                tag=f"stage:{stage.name}", data=tuple(stage.inputs),
+                needs_mesh=False, app_id="session:analytics"))
+            return cu.wait(timeout)
+        # Mode I: carve an on-demand analytics cluster out of the HPC
+        # pilot holding the data (compute goes to the data).
+        decision["mode"] = "mode1-carve"
+        n = stage.n_chips or len(pilot.devices)
+        cluster = pilot.spawn_analytics_cluster(n)
+        decision["mode1_spawn_s"] = cluster.startup_s
+        try:
+            return stage.fn(
+                **self._call_kwargs(stage, {"engine": cluster.engine}))
+        finally:
+            cluster.shutdown()
+
+    def _engine_for(self, pilot: Pilot):
+        from repro.analytics.engine import AnalyticsEngine
+        with self._lock:
+            eng = self._engines.get(pilot.uid)
+            if eng is None:
+                eng = AnalyticsEngine(pilot.mesh(), self.dataplane)
+                self._engines[pilot.uid] = eng
+        return eng
+
+    def _store_outputs(self, stage: Stage, pilot: Pilot, result: Any) -> None:
+        """Publish declared outputs to the DataPlane, homed on the pilot
+        that produced them, with lineage for re-materialization."""
+        if not stage.outputs:
+            return
+        if isinstance(result, dict):
+            pairs = [(n, result.get(n)) for n in stage.outputs]
+        elif len(stage.outputs) == 1:
+            pairs = [(stage.outputs[0], result)]
+        else:
+            pairs = list(zip(stage.outputs, result))
+        missing = [n for n in stage.outputs
+                   if n not in dict(pairs) or dict(pairs)[n] is None]
+        if missing:
+            raise ValueError(
+                f"stage {stage.name!r} declared outputs {missing} but did "
+                "not return them")
+        lineage = Lineage(stage=stage.name, inputs=tuple(stage.inputs))
+        for name, val in pairs:
+            arr = jax.device_put(jnp.asarray(val),
+                                 NamedSharding(pilot.mesh(), P()))
+            self.dataplane.put(name, arr, pilot=pilot.uid, lineage=lineage)
+
+    # ------------------------------------------------------------- recovery
+    def rematerialize(self, name: str, *, timeout: float = 600.0) -> Any:
+        """Re-run the producer of a lost dataset (lineage recovery): the
+        DataPlane remembers how `name` was made; the placer re-places the
+        producing stage with the current pilot set."""
+        lin = self.dataplane.lineage_of(name)
+        if lin is None or lin.stage not in self._stages:
+            raise KeyError(f"no lineage for {name!r}")
+        stage = self._stages[lin.stage]
+        return self._run_stage(stage, (), timeout)

@@ -10,6 +10,8 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -235,7 +237,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     plan = Plan.for_mesh(mesh)
     t0 = time.time()
     fn, args, extra = build_cell(cfg, shape, mesh, plan, overrides)
-    with jax.set_mesh(mesh):   # set_mesh: populates the abstract mesh that
+    with compat.set_mesh(mesh):   # set_mesh: populates the abstract mesh that
         lowered = fn.lower(*args)  # the MoE EP shard_map path reads
         rec["lower_s"] = round(time.time() - t0, 2)
         t1 = time.time()

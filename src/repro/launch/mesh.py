@@ -5,19 +5,16 @@ touches jax device state — the dry-run sets XLA_FLAGS before first init.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, *, tp: int = 1, axis_names=("data", "model")):
     """Smaller meshes for pilots/tests: (n_devices//tp, tp)."""
     assert n_devices % tp == 0, (n_devices, tp)
-    return jax.make_mesh((n_devices // tp, tp), axis_names,
-                         axis_types=(AxisType.Auto,) * len(axis_names))
+    return compat.make_mesh((n_devices // tp, tp), axis_names)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from .common import normal_init
 
 Params = Dict[str, Any]
@@ -228,7 +229,7 @@ def _combine_ep_shardmap(cfg, p, xg, dest, keep, sorted_tok, wsort,
             gathered * wsort[..., None])
         return jax.lax.psum(partial, axis)                 # (g_l, tg, d)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         rank_fn, mesh=mesh, check_vma=False,
         in_specs=(P(g_spec, None, None), P(g_spec, None), P(g_spec, None),
                   P(g_spec, None), P(g_spec, None),

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ComputeUnitDescription, Pilot
+from repro.core.dataplane import DataPlane, Link
 from repro.data.pipeline import TokenPipeline
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -29,13 +30,30 @@ from repro.optim import adamw, compression
 
 
 class MultiPilotTrainer:
-    def __init__(self, cfg: ModelConfig, pilots: List[Pilot], *,
-                 global_batch: int = 8, seq: int = 64,
+    """Cross-pilot data-parallel trainer; a Session client.
+
+    When given a ``session`` (or a ``dataplane``), the trainer draws its
+    pilots from the Session's HPC-runtime pilots and reports every
+    gradient-exchange wire byte to the shared DataPlane ledger over the
+    inter-pilot DCN link — the same ledger the Session's placer reads,
+    so training traffic and stage-placement traffic are one account.
+    """
+
+    def __init__(self, cfg: ModelConfig, pilots: Optional[List[Pilot]] = None,
+                 *, global_batch: int = 8, seq: int = 64,
                  hyper: adamw.Hyper = adamw.Hyper(lr=1e-3),
-                 compress: bool = True, seed: int = 0):
+                 compress: bool = True, seed: int = 0,
+                 session=None, dataplane: Optional[DataPlane] = None):
+        if pilots is None:
+            if session is None:
+                raise ValueError("need pilots or a session to draw them from")
+            pilots = session.pilots_by_runtime("hpc")
+        if not pilots:
+            raise ValueError("no HPC-runtime pilots available")
         assert global_batch % len(pilots) == 0
         self.cfg = cfg
         self.pilots = pilots
+        self.dataplane = dataplane or (session.dataplane if session else None)
         self.global_batch = global_batch
         self.seq = seq
         self.hyper = hyper
@@ -99,7 +117,11 @@ class MultiPilotTrainer:
                    for p, s in zip(self.pilots, shards)]
             results = [cu.wait(600) for cu in cus]
             losses = [r[0] for r in results]
+            wire_before = self.wire_bytes
             avg_grads = self._exchange([r[1] for r in results])
+            if self.dataplane is not None:
+                self.dataplane.record_moved(self.wire_bytes - wire_before,
+                                            Link.DCN, "grad-exchange")
             self.params, self.opt, om = adamw.update(
                 self.params, avg_grads, self.opt, self.step_count, self.hyper)
             self.step_count = self.step_count + 1

@@ -17,6 +17,8 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -68,7 +70,7 @@ class Trainer:
 
     # -------------------------------------------------------------- state
     def init_state(self) -> None:
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             init = jax.jit(
                 lambda k: make_train_state(
                     self.cfg, transformer.init_params(self.cfg, k)),
@@ -97,7 +99,7 @@ class Trainer:
                  else int(jax.device_get(self.state["step"])))
         self.pipeline.start(from_step=step0)
         try:
-            with jax.set_mesh(self.mesh):
+            with compat.set_mesh(self.mesh):
                 for i, batch in zip(range(step0, n_steps), self.pipeline):
                     if inject_failure_at is not None and i == inject_failure_at:
                         raise RuntimeError("injected node failure")
@@ -117,6 +119,8 @@ class Trainer:
                         self.ckpt.save(self.state, i + 1)
         finally:
             self.pipeline.stop()
+            if self.ckpt is not None:
+                self.ckpt.wait()   # publish in-flight saves even on failure
         if self.ckpt is not None:
             self.ckpt.save(self.state, n_steps, blocking=True)
         return self.history

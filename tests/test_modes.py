@@ -1,0 +1,54 @@
+"""Mode I lifecycle coverage: the on-demand analytics cluster carved out
+of an HPC pilot must give its chips BACK, exactly once."""
+import jax
+import pytest
+
+from repro.core import PilotDescription, PilotManager, ResourceManager
+
+
+@pytest.fixture
+def pm():
+    m = PilotManager(ResourceManager(devices=jax.devices() * 2))
+    yield m
+    m.shutdown()
+
+
+def test_chips_return_to_parent_free_set(pm):
+    pilot = pm.submit(PilotDescription(n_chips=2, name="m1"))
+    free_before = set(pilot.agent.scheduler._free)
+    assert pilot.agent.scheduler.n_free == 2
+    cluster = pilot.spawn_analytics_cluster(2)
+    assert pilot.agent.scheduler.n_free == 0
+    cluster.shutdown()
+    assert pilot.agent.scheduler.n_free == 2
+    # the same slot indices, not merely the same count
+    assert set(pilot.agent.scheduler._free) == free_before
+
+
+def test_shutdown_is_idempotent(pm):
+    pilot = pm.submit(PilotDescription(n_chips=2, name="m1i"))
+    cluster = pilot.spawn_analytics_cluster(1)
+    cluster.shutdown()
+    n_after_first = pilot.agent.scheduler.n_free
+    cluster.shutdown()                    # second shutdown must be a no-op
+    cluster.shutdown()
+    assert pilot.agent.scheduler.n_free == n_after_first == 2
+
+
+def test_cluster_usable_then_chips_still_accounted(pm):
+    """Run real analytics through the carved cluster, shut down, and the
+    parent pilot can immediately reuse every chip for a gang CU."""
+    import numpy as np
+    from repro.analytics import kmeans as km
+    from repro.core import ComputeUnitDescription
+
+    pilot = pm.submit(PilotDescription(n_chips=2, name="m1u"))
+    cluster = pilot.spawn_analytics_cluster(1)  # 1 chip: real device_put
+    cluster.engine.put("pts", np.asarray(
+        km.make_dataset(64, 3, n_clusters=4, seed=0)))
+    centroids, cost = km.kmeans_fit(cluster.engine, "pts", 4, iters=2)
+    assert np.isfinite(cost) and centroids.shape == (4, 3)
+    cluster.shutdown()
+    cu = pilot.submit(ComputeUnitDescription(
+        fn=lambda mesh=None: len(mesh.devices.flat), n_chips=2, gang=True))
+    assert cu.wait(60) == 2

@@ -31,8 +31,8 @@ def test_sharded_training_matches_single_device():
     cfg = configs.get_smoke("internlm2-1.8b")
     losses = {}
     for shape in [(2, 2), (1, 1)]:
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh(shape, ("data", "model"))
         tr = Trainer(cfg, mesh, global_batch=4, seq=16, seed=5)
         losses[shape] = [h["loss"] for h in tr.run(4, log_every=0)]
     np.testing.assert_allclose(losses[(2, 2)], losses[(1, 1)], rtol=2e-2)
@@ -70,8 +70,8 @@ def test_elastic_shrink_reshard_restore():
     assert [h["step"] for h in hist] == [6, 7]
 
     # reference: uninterrupted 1-device run, same seed
-    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh1 = compat.make_mesh((1, 1), ("data", "model"))
     tr3 = Trainer(cfg, mesh1, global_batch=4, seq=16, seed=7)
     ref = {h["step"]: h["loss"] for h in tr3.run(8, log_every=0)}
     for h in hist:
@@ -94,7 +94,8 @@ def test_pilot_gang_mesh_multidevice():
 
     def hpc(mesh=None):
         assert mesh.size == 4, mesh
-        with jax.set_mesh(mesh):
+        from repro import compat
+        with compat.set_mesh(mesh):
             x = jax.device_put(jnp.arange(16.0).reshape(8, 2),
                                NamedSharding(mesh, P("data", "model")))
             return float(jax.jit(lambda v: (v * v).sum())(x))
@@ -118,8 +119,8 @@ def test_compressed_psum_on_pod_axis():
     from jax.sharding import PartitionSpec as P
     from repro.optim import compression
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((4,), ("pod",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
     res = jnp.zeros_like(x)
@@ -128,9 +129,9 @@ def test_compressed_psum_on_pod_axis():
         out, nr = compression.compressed_psum(xs, rs, "pod")
         return out, nr
 
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                              out_specs=(P("pod"), P("pod")),
-                              check_vma=False))
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                                 out_specs=(P("pod"), P("pod")),
+                                 check_vma=False))
     out, nr = g(x, res)
     exact = jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape)
     rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))

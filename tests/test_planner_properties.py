@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # suite degrades to skips without it
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

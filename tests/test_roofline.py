@@ -35,7 +35,10 @@ def test_analytic_flops_matches_xla_single_layer():
 
     fwd = jax.jit(lambda p, b: transformer.forward(cfg, p, b, remat=False))
     compiled = fwd.lower(params, batch).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):            # old jax returns [dict]
+        ca = ca[0]
+    xla_flops = ca["flops"]
     ours = analytic.forward_flops(cfg, B, S)
     ratio = ours / xla_flops
     assert 0.7 < ratio < 1.4, f"analytic/xla flops ratio {ratio:.2f}"
@@ -73,8 +76,8 @@ def test_collective_parser_while_loop_multiplier():
     import sys; sys.path.insert(0, "src")
     from repro.roofline.hlo import collective_bytes_per_device
 
-    mesh = jax.make_mesh((4,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((4,), ("d",))
     TRIPS = 7
 
     def f(x):

@@ -2,6 +2,7 @@
 import threading
 
 import pytest
+pytest.importorskip("hypothesis")  # suite degrades to skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compute_unit import ComputeUnit, ComputeUnitDescription, CUState

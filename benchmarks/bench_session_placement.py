@@ -8,10 +8,11 @@ crossover: cheap links consolidate the analytics stage onto its native
 pilot (moving the data); expensive links pin it to the data-resident
 HPC pilot via a Mode-I carve-out (moving nothing).
 
-    PYTHONPATH=src python benchmarks/bench_session_placement.py
+    PYTHONPATH=src python benchmarks/bench_session_placement.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -66,8 +67,14 @@ def run_one(dcn_cost: float, n_points: int) -> Dict:
     return row
 
 
-def sweep() -> List[Dict]:
-    return [run_one(c, n) for n in N_POINTS for c in DCN_COSTS]
+SMOKE_DCN_COSTS = (0.0, 1.0)        # just both sides of the crossover
+SMOKE_N_POINTS = (1024,)
+
+
+def sweep(smoke: bool = False) -> List[Dict]:
+    costs = SMOKE_DCN_COSTS if smoke else DCN_COSTS
+    points = SMOKE_N_POINTS if smoke else N_POINTS
+    return [run_one(c, n) for n in points for c in costs]
 
 
 def run() -> List[Dict]:
@@ -81,7 +88,11 @@ def run() -> List[Dict]:
 
 
 def main() -> None:
-    rows = sweep()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (two costs, one dataset size)")
+    args = ap.parse_args()
+    rows = sweep(smoke=args.smoke)
     hdr = (f"{'dcn $/B':>10} {'points':>7} {'placed_on':>9} {'mode':>12} "
            f"{'dcn_B':>9} {'ici_B':>9} {'score_hpc':>10} {'score_ana':>10} "
            f"{'wall_s':>7}")

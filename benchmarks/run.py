@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig5      — Pilot/CU startup overheads (paper Fig 5) + AppMaster reuse
   fig6      — K-Means scenarios, local vs global data path (paper Fig 6)
   fig8      — Session placement sweep: locality vs movement cost crossover
+  elastic   — static split vs ControlPlane rebalancing (makespan, moved B)
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
@@ -17,16 +18,18 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=[None, "fig5", "fig6", "fig8", "kernels",
-                             "roofline"])
+                    choices=[None, "fig5", "fig6", "fig8", "elastic",
+                             "kernels", "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import (bench_kernels, bench_session_placement,
-                            fig5_overheads, fig6_kmeans, roofline_table)
+    from benchmarks import (bench_elastic, bench_kernels,
+                            bench_session_placement, fig5_overheads,
+                            fig6_kmeans, roofline_table)
     sections = {
         "fig5": fig5_overheads.run,
         "fig6": fig6_kmeans.run,
         "fig8": bench_session_placement.run,
+        "elastic": bench_elastic.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,
     }

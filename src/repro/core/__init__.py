@@ -10,6 +10,7 @@ two-phase admission with AppMaster reuse, straggler speculation and
 elastic resize.  See DESIGN.md for the full architecture map.
 """
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState  # noqa: F401
+from .control_plane import ControlPlane, RebalanceEvent  # noqa: F401
 from .dataplane import (DataPlane, Lineage, Link, PilotData,  # noqa: F401
                         PilotDataRegistry, TransferCostModel)
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401

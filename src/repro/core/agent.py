@@ -9,7 +9,13 @@ a small TaskSpawner pool. Includes:
   * straggler mitigation — per-tag EMA runtimes; a watchdog launches a
     speculative duplicate when a CU overruns; first finisher wins;
   * failure handling — device loss re-queues impacted CUs (bounded by
-    max_retries) on the shrunken slot table.
+    max_retries) on the shrunken slot table;
+  * heartbeats — a periodically refreshed backlog/pressure snapshot
+    (queue depth, chip demand, EMA runtimes) the ControlPlane polls to
+    decide cross-pilot rebalances;
+  * drain servicing — :meth:`service_drain` stops new binds on a device
+    set, waits for (or preempts and re-queues) the CUs on it, and hands
+    the freed devices back for the lease reclaim.
 """
 from __future__ import annotations
 
@@ -40,7 +46,8 @@ class LocalResourceManager:
 
 class Agent:
     def __init__(self, pilot, *, reuse_app_master: bool = True,
-                 app_master_overhead_s: float = 0.0, n_spawners: int = 4,
+                 app_master_overhead_s: float = 0.0,
+                 n_spawners: Optional[int] = None,
                  enable_speculation: bool = True):
         self.pilot = pilot
         self.lrm = LocalResourceManager(pilot)
@@ -48,7 +55,11 @@ class Agent:
             self.lrm.devices, self.lrm.hbm_per_chip, pilot.data,
             reuse_app_master=reuse_app_master,
             app_master_overhead_s=app_master_overhead_s)
-        self._pool = ThreadPoolExecutor(max_workers=n_spawners,
+        # sized past the slot count so an elastic grow (absorbed devices)
+        # still finds idle spawner threads; executors are sleep-heavy in
+        # the dry-run, so over-provisioning is cheap
+        workers = n_spawners or max(4, 2 * self.lrm.n_chips + 4)
+        self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix=f"{pilot.uid}-spawn")
         self._wake = threading.Event()
         self._stop = threading.Event()
@@ -83,22 +94,14 @@ class Agent:
         return cu
 
     def reserve_chips(self, n: int) -> List[int]:
-        """Take n chips out of the slot table (Mode-I analytics carve-out)."""
-        deadline = time.monotonic() + 30
-        while time.monotonic() < deadline:
-            with self.scheduler._lock:
-                if len(self.scheduler._free) >= n:
-                    take = sorted(self.scheduler._free)[:n]
-                    for i in take:
-                        self.scheduler._free.discard(i)
-                    return take
-            time.sleep(0.01)
-        raise RuntimeError(f"could not reserve {n} chips (busy)")
+        """Take n chips out of the slot table (Mode-I analytics carve-out).
+        Goes through the scheduler's public carve-out API, which also
+        moves the chips' HBM out of the admission accounting."""
+        return self.scheduler.carve_out(n, timeout=30.0)
 
     def return_chips(self, idxs: Sequence[int]) -> None:
-        with self.scheduler._lock:
-            for i in idxs:
-                self.scheduler._free.add(i)
+        self.scheduler.restore(idxs)
+        self._wake.set()
 
     # ---------------------------------------------------------------- loop
     def _loop(self) -> None:
@@ -107,37 +110,50 @@ class Agent:
             bound = self.scheduler.try_schedule()
             for cu, idxs in bound:
                 cu.assigned_devices = self.scheduler.devices_of(idxs)
-                self._pool.submit(self._spawn, cu)
+                gen = self.scheduler.binding_gen(cu)
+                self._pool.submit(self._spawn, cu, gen)
             self._check_stragglers()
             self._heartbeat()
             self._wake.wait(timeout=0.02)
             self._wake.clear()
 
     # ------------------------------------------------------------ heartbeat
-    def _heartbeat(self) -> None:
+    def _heartbeat(self, force: bool = False) -> None:
         """Paper Fig 3: the agent's Heartbeat Monitor — a periodically
-        refreshed liveness/status snapshot the Pilot-Manager can poll."""
+        refreshed liveness/status snapshot the Pilot-Manager's
+        ControlPlane polls for backlog pressure."""
         now = time.monotonic()
-        if now - getattr(self, "_last_beat", 0.0) < 0.25:
+        if not force and now - getattr(self, "_last_beat", 0.0) < 0.25:
             return
         self._last_beat = now
         with self._lock:
             states: Dict[str, int] = {}
             for cu in self._cus.values():
                 states[cu.state.value] = states.get(cu.state.value, 0) + 1
+            ema = dict(self._ema)
+        backlog = self.scheduler.backlog()
         self.status = {
             "t": now,
-            "free_chips": self.scheduler.n_free,
+            "free_chips": backlog["n_free"],
+            "n_slots": backlog["n_slots"],
+            "busy_chips": backlog["busy_chips"],
+            "queue_len": backlog["queue_len"],
+            "queued_chip_demand": backlog["queued_chip_demand"],
+            "n_draining": backlog["n_draining"],
+            "ema_runtimes": ema,
             "cu_states": states,
             "scheduler": dict(self.scheduler.stats),
         }
 
+    def heartbeat(self) -> Dict[str, Any]:
+        """Force-refresh and return the status snapshot (ControlPlane poll)."""
+        self._heartbeat(force=True)
+        return self.status
+
     def _check_preemption(self) -> None:
         """Evict lower-priority running CUs for starved high-priority ones
         (victims are canceled and re-queued)."""
-        with self.scheduler._lock:
-            pending = [c for c in self.scheduler._queue
-                       if c.state is CUState.PENDING or c.state is CUState.RESERVED]
+        pending = self.scheduler.pending_cus()
         if not pending:
             return
         top = max(pending, key=lambda c: c.desc.priority)
@@ -150,19 +166,69 @@ class Agent:
             victim = self._cus.get(uid)
             if victim is None or victim.done:
                 continue
-            victim._set_state(CUState.CANCELED)
-            self.scheduler.release(victim)
-            clone = ComputeUnit(victim.desc)
-            clone.retries = victim.retries
-            with self._lock:
-                self._cus[clone.uid] = clone
-            self.scheduler.submit(clone)
-            victim.result = clone  # caller can follow the re-queued copy
+            self._requeue_clone(victim)
             self.scheduler.stats["preempted"] = \
                 self.scheduler.stats.get("preempted", 0) + 1
 
+    def _requeue_clone(self, victim: ComputeUnit, *,
+                       retries: Optional[int] = None) -> ComputeUnit:
+        """Cancel a CU and replace it with a fresh clone on the queue.
+        The forwarding pointer (victim.result = clone) is published
+        BEFORE the CANCELED state wakes any waiter, so CU.follow never
+        observes a canceled CU with no clone to chase."""
+        clone = ComputeUnit(victim.desc)
+        clone.retries = victim.retries if retries is None else retries
+        with self._lock:
+            self._cus[clone.uid] = clone
+        victim.result = clone
+        victim._set_state(CUState.CANCELED)
+        self.scheduler.release(victim)
+        self.scheduler.submit(clone)
+        self._wake.set()
+        return clone
+
+    # --------------------------------------------------------------- drain
+    def service_drain(self, idxs: Sequence[int], *,
+                      preempt_after_s: float = 0.5,
+                      timeout: float = 30.0) -> List:
+        """Service a ControlPlane drain request: stop new binds on `idxs`,
+        wait for the CUs running there to finish — preempting (cancel +
+        re-queue onto surviving slots) any still running after
+        ``preempt_after_s`` — then drop the slots.  Returns the freed
+        device objects for the lease reclaim."""
+        self.scheduler.begin_drain(idxs)
+        t0 = time.monotonic()
+        preempted = False
+        while not self.scheduler.drain_idle(idxs):
+            now = time.monotonic()
+            if not preempted and now - t0 >= preempt_after_s:
+                self._preempt_draining(idxs)
+                preempted = True
+            if now - t0 > timeout:
+                break          # logical slots: finish anyway, CUs complete
+            time.sleep(0.005)
+        devs = self.scheduler.finish_drain(idxs)
+        self._wake.set()
+        return devs
+
+    def _preempt_draining(self, idxs: Sequence[int]) -> None:
+        target = set(idxs)
+        for uid, assigned in self.scheduler.running_assignments().items():
+            if not target & set(assigned):
+                continue
+            victim = self._cus.get(uid)
+            if victim is None or victim.done:
+                continue
+            self._requeue_clone(victim)
+            self.scheduler.stats["drain_preempted"] = \
+                self.scheduler.stats.get("drain_preempted", 0) + 1
+
     # --------------------------------------------------------- TaskSpawner
-    def _spawn(self, cu: ComputeUnit) -> None:
+    def _spawn(self, cu: ComputeUnit, gen: Optional[int] = None) -> None:
+        if cu.done:                      # canceled while queued in the pool
+            self.scheduler.release(cu, gen=gen)
+            self._wake.set()
+            return
         cu._set_state(CUState.RUNNING)
         try:
             kwargs = dict(cu.desc.kwargs)
@@ -170,27 +236,30 @@ class Agent:
                 kwargs["mesh"] = self.pilot.mesh(cu.assigned_devices)
             fn = self._launch_method(cu)
             result = fn(*cu.desc.args, **kwargs)
-            if cu.state is CUState.CANCELED:
+            # a speculation winner or a preemption may have resolved this
+            # CU while fn ran — never clobber the published result
+            if cu.done or cu.state is CUState.CANCELED:
                 return
             cu.result = result
             cu._set_state(CUState.DONE)
             self._record_runtime(cu)
             self._resolve_speculation(cu)
         except BaseException as e:  # noqa: BLE001 — agent must survive any CU
-            if cu.state is CUState.CANCELED:
+            if cu.done or cu.state is CUState.CANCELED:
                 return
             cu.error = e
             if cu.retries < cu.desc.max_retries:
                 cu.retries += 1
                 cu._done.clear()
-                self.scheduler.release(cu)
+                self.scheduler.release(cu, gen=gen)
                 self.scheduler.submit(cu)
                 self._wake.set()
                 return
             cu._set_state(CUState.FAILED)
         finally:
-            if cu.state is not CUState.PENDING:
-                self.scheduler.release(cu)
+            # gen guards the retry race: if this CU was already released
+            # and re-admitted, the stale token makes this a no-op
+            self.scheduler.release(cu, gen=gen)
             self._wake.set()
 
     def _launch_method(self, cu: ComputeUnit):
@@ -259,13 +328,9 @@ class Agent:
             cu = self._cus.get(uid)
             if cu is None or cu.done:
                 continue
-            cu._set_state(CUState.CANCELED)
             if cu.retries < max(cu.desc.max_retries, 1):
-                clone = ComputeUnit(cu.desc)
-                clone.retries = cu.retries + 1
-                with self._lock:
-                    self._cus[clone.uid] = clone
-                self.scheduler.submit(clone)
-                cu.result = clone  # callers may follow the replacement
+                self._requeue_clone(cu, retries=cu.retries + 1)
+            else:
+                cu._set_state(CUState.CANCELED)
         self._wake.set()
         return impacted

@@ -78,6 +78,23 @@ class ComputeUnit:
     def done(self) -> bool:
         return self._done.is_set()
 
+    def follow(self, timeout: Optional[float] = None) -> Any:
+        """Like :meth:`wait`, but follows re-queue clones: preemption,
+        drain and device-loss replace a canceled CU with a clone and
+        leave it in ``result`` — callers that just want the final value
+        chase the chain to its end."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        cu: "ComputeUnit" = self
+        while True:
+            left = (None if deadline is None
+                    else max(deadline - time.monotonic(), 0.0))
+            out = cu.wait(left)
+            if isinstance(out, ComputeUnit):
+                cu = out
+                continue
+            return out
+
     # ------------------------------------------------------- measurements
     def overhead_s(self) -> Optional[float]:
         """Submission -> execution-start latency (the paper's Fig-5 inset)."""

@@ -1,0 +1,223 @@
+"""ControlPlane: elastic cross-pilot device rebalancing.
+
+The half of the paper's title PR 1 did not build — *pilot-based dynamic
+resource management*.  The Session places stages across pilots, but each
+pilot's device slice was frozen at creation: a backlogged analytics
+pilot starved while an idle HPC pilot held chips.  The ControlPlane,
+owned by the :class:`PilotManager`, closes that loop:
+
+  1. **poll** — every active pilot's Agent heartbeat (queue depth,
+     queued chip demand, free chips, EMA runtimes) is folded into a
+     scalar *pressure* = (queued chip demand + busy chips) / slots;
+  2. **decide** — :meth:`rebalance` moves chips from the coldest pilot
+     to the hottest when the pressure gap clears the hysteresis band
+     (so near-balanced pilots do not thrash chips back and forth);
+  3. **drain** — the cold pilot's scheduler marks the chips DRAINING
+     (no new binds); its Agent waits for — or preempts and re-queues —
+     the CUs running there (:meth:`Agent.service_drain`);
+  4. **evict** — the shared DataPlane re-replicates every dataset with
+     shards on the leaving chips onto the survivors, itemizing the
+     bytes on the ledger (``reason="drain-evict"``), so named data
+     survives the shrink;
+  5. **reclaim/grant** — the lease moves through the ResourceManager's
+     explicit lifecycle, and the hot pilot's Agent/Scheduler absorb the
+     new slots live (queued gang CUs bind mid-run).
+
+:meth:`grow` is the demand-paged variant the Session uses when a stage
+is unplaceable: free exactly the deficit from the coldest pilots and
+grant it to the chosen one.  ``in_flight`` exposes pending resizes so
+the Session's placer never counts chips that are already leaving.
+
+Run :meth:`start` for an autonomous polling loop, or call
+:meth:`rebalance` from your own cadence (benchmarks do both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from .dataplane import Link, replicated_sharding
+
+
+@dataclasses.dataclass
+class RebalanceEvent:
+    """One completed chip movement (the audit record of a rebalance)."""
+    t: float
+    src: str                      # pilot uid the chips left
+    dst: str                      # pilot uid that absorbed them
+    n_chips: int
+    evicted: Dict[str, int]       # dataset name -> bytes re-replicated
+    reason: str
+
+    @property
+    def evicted_bytes(self) -> int:
+        return sum(self.evicted.values())
+
+
+class ControlPlane:
+    def __init__(self, pm, *, hysteresis: float = 0.5,
+                 min_chips: int = 1, max_move_fraction: float = 0.5,
+                 min_keep: int = 1,
+                 drain_preempt_after_s: float = 0.5,
+                 drain_timeout_s: float = 30.0):
+        self.pm = pm
+        self.hysteresis = hysteresis
+        self.min_chips = min_chips                  # never move fewer
+        self.max_move_fraction = max_move_fraction  # ...or more per step
+        self.min_keep = min_keep                    # chips a pilot keeps
+        self.drain_preempt_after_s = drain_preempt_after_s
+        self.drain_timeout_s = drain_timeout_s
+        self.in_flight: Dict[str, int] = {}   # pilot uid -> pending chip Δ
+        self.events: List[RebalanceEvent] = []
+        self.errors: List[BaseException] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- polling
+    def _active_pilots(self) -> List:
+        return [p for p in self.pm.pilots
+                if p.agent is not None and p.state.value == "active"]
+
+    @staticmethod
+    def pressure_of(hb: Dict[str, Any]) -> float:
+        """Backlog pressure from one heartbeat: demanded + held chips,
+        normalized by the pilot's live slot count."""
+        slots = max(hb.get("n_slots", 0), 1)
+        demand = hb.get("queued_chip_demand", 0) + hb.get("busy_chips", 0)
+        return demand / slots
+
+    def poll(self) -> Dict[str, Dict[str, Any]]:
+        """Fresh heartbeat + pressure per active pilot (keyed by uid)."""
+        out = {}
+        for p in self._active_pilots():
+            hb = p.agent.heartbeat()
+            out[p.uid] = {**hb, "pressure": self.pressure_of(hb),
+                          "pilot": p, "name": p.desc.name}
+        return out
+
+    def pending_delta(self, pilot_uid: str) -> int:
+        """Chips in flight toward (+) or away from (−) a pilot; the
+        Session's placer subtracts pending shrinks from capacity."""
+        with self._lock:
+            return self.in_flight.get(pilot_uid, 0)
+
+    # ------------------------------------------------------------ deciding
+    def rebalance(self, max_chips: Optional[int] = None
+                  ) -> Optional[RebalanceEvent]:
+        """One control step: move idle chips from the coldest pilot to
+        the hottest if the pressure gap clears the hysteresis band.
+        Returns the event, or None when balanced (or nothing to move)."""
+        snap = self.poll()
+        if len(snap) < 2:
+            return None
+        hot = max(snap.values(), key=lambda m: m["pressure"])
+        cold = min(snap.values(), key=lambda m: m["pressure"])
+        if hot["pilot"].uid == cold["pilot"].uid:
+            return None
+        if hot["pressure"] - cold["pressure"] < self.hysteresis:
+            return None
+        step_cap = max(int(cold["n_slots"] * self.max_move_fraction),
+                       self.min_chips)
+        n = min(cold["free_chips"], step_cap,
+                cold["n_slots"] - self.min_keep)
+        if max_chips is not None:
+            n = min(n, max_chips)
+        if n < self.min_chips:
+            return None
+        return self.move(cold["pilot"], hot["pilot"], n, reason="pressure")
+
+    def grow(self, pilot, n: int, *, reason: str = "unplaceable") -> int:
+        """Free `n` chips from the coldest other pilots and grant them to
+        `pilot` (the Session's unplaceable-stage path). Busy chips may be
+        preempted by the drain. Returns chips actually granted."""
+        granted = 0
+        others = sorted((m for m in self.poll().values()
+                         if m["pilot"].uid != pilot.uid),
+                        key=lambda m: m["pressure"])
+        for m in others:
+            if granted >= n:
+                break
+            take = min(n - granted, m["n_slots"] - self.min_keep)
+            if take < 1:
+                continue
+            ev = self.move(m["pilot"], pilot, take, reason=reason)
+            if ev is not None:
+                granted += ev.n_chips
+        return granted
+
+    # ------------------------------------------------------------- moving
+    def move(self, src, dst, n: int, *,
+             reason: str = "rebalance") -> Optional[RebalanceEvent]:
+        """Drain `n` chips from `src`, evict their shards, walk the lease
+        through reclaim → grant, and have `dst` absorb the slots live."""
+        # never shrink below the largest gang the src pilot still owes:
+        # a drain-preempted gang clone bigger than the shrunken pilot
+        # would FAIL fast instead of waiting for chips that left
+        gang_floor = src.agent.scheduler.max_gang_demand()
+        if gang_floor:
+            n = min(n, max(src.agent.scheduler.n_slots - gang_floor, 0))
+        if n < 1:
+            return None
+        with self._lock:
+            self.in_flight[src.uid] = self.in_flight.get(src.uid, 0) - n
+            self.in_flight[dst.uid] = self.in_flight.get(dst.uid, 0) + n
+        try:
+            devs = src.surrender_devices(
+                n, preempt_after_s=self.drain_preempt_after_s,
+                timeout=self.drain_timeout_s)
+            if not devs:
+                return None
+            # re-replicate shards off the leaving chips (or, if the pilot
+            # is losing its whole slice, fall back to lineage recovery)
+            if src.devices:
+                sharding = replicated_sharding(src.devices)
+                evicted = src.data.evict_devices(
+                    devs, sharding, pilot=src.uid,
+                    link=Link.ICI, reason="drain-evict")
+            else:
+                evicted = {}
+                src.data.drop_pilot_replicas(src.uid)
+            self.pm.rm.reclaim(src.uid, devs)
+            granted = self.pm.rm.grant(len(devs), dst.uid)
+            dst.absorb_devices(granted)
+            ev = RebalanceEvent(t=time.monotonic(), src=src.uid, dst=dst.uid,
+                                n_chips=len(granted), evicted=evicted,
+                                reason=reason)
+            with self._lock:
+                self.events.append(ev)
+            return ev
+        finally:
+            with self._lock:
+                self.in_flight[src.uid] += n
+                self.in_flight[dst.uid] -= n
+
+    # ---------------------------------------------------------- autonomous
+    def start(self, interval_s: float = 0.25) -> None:
+        """Poll-and-rebalance on a daemon thread until :meth:`stop`."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, args=(interval_s,),
+                                        daemon=True, name="control-plane")
+        self._thread.start()
+
+    def _loop(self, interval_s: float) -> None:
+        while not self._stop.wait(interval_s):
+            try:
+                self.rebalance()
+            except BaseException as e:  # noqa: BLE001 — keep the loop alive
+                self.errors.append(e)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    # ---------------------------------------------------------------- info
+    def moved_chips(self) -> int:
+        with self._lock:
+            return sum(e.n_chips for e in self.events)

@@ -28,7 +28,26 @@ import dataclasses
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
 import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def replicated_sharding(devices: Sequence) -> NamedSharding:
+    """Fully-replicated sharding over the UNIQUE devices of a slice.
+
+    Dry-run pilots alias one physical device across many lease slots;
+    ``jax.device_put`` rejects meshes with duplicated devices, so every
+    replicate-onto-a-pilot site goes through this helper."""
+    uniq, seen = [], set()
+    for d in devices:
+        if id(d) not in seen:
+            seen.add(id(d))
+            uniq.append(d)
+    if not uniq:
+        raise ValueError("replicated_sharding of an empty device slice")
+    mesh = Mesh(np.array(uniq).reshape(len(uniq), 1), ("data", "model"))
+    return NamedSharding(mesh, PartitionSpec())
 
 
 class Link:
@@ -247,6 +266,53 @@ class DataPlane:
         if nonres:
             self.record_moved(nonres, link, reason or f"move:{name}")
         return moved, nonres
+
+    # ------------------------------------------------------------- eviction
+    def datasets_on_devices(self, devices: Sequence,
+                            pilot: Optional[str] = None) -> List[str]:
+        """Names whose shards touch any of `devices`; with `pilot`,
+        restricted to datasets that pilot (possibly) holds a replica of
+        (never-attributed datasets are included — device overlap is the
+        fallback truth, as in pilot_locality)."""
+        ids = {id(d) for d in devices}
+        with self._lock:
+            names = list(self._data)
+        out = []
+        for name in names:
+            pd = self._data.get(name)
+            if pd is None:
+                continue
+            if pilot is not None and self.resident_on(name, pilot) is False:
+                continue
+            if any(id(d) in ids for d in pd.device_set()):
+                out.append(name)
+        return out
+
+    def evict_devices(self, devices: Sequence, sharding, *,
+                      pilot: Optional[str] = None, link: str = Link.ICI,
+                      reason: str = "drain-evict") -> Dict[str, int]:
+        """Drain-time re-replication: every dataset with shards on
+        `devices` is moved onto `sharding` (the surviving slice) so the
+        chips can leave without losing named data.  Only the fraction of
+        each dataset's devices being drained pays the link — those bytes
+        land on the ledger under `reason`.  Returns name -> bytes."""
+        ids = {id(d) for d in devices}
+        moved: Dict[str, int] = {}
+        for name in self.datasets_on_devices(devices, pilot):
+            pd = self._data.get(name)
+            if pd is None:
+                continue
+            mine = pd.device_set()
+            frac = (len({d for d in mine if id(d) in ids}) / len(mine)
+                    if mine else 0.0)
+            nbytes = int(pd.nbytes * frac)
+            arr = jax.device_put(pd.array, sharding)
+            with self._lock:
+                self._data[name] = PilotData(name, arr)
+            if nbytes:
+                self.record_moved(nbytes, link, reason)
+            moved[name] = nbytes
+        return moved
 
     # ---------------------------------------------------------------- stats
     @property

@@ -5,6 +5,13 @@ job (steps P.1-P.2) whose Agent then pulls Compute-Units from the shared
 queue (U.1-U.7). Here the placeholder job materializes as a device-slice
 lease + Agent thread; pilot startup time (lease + agent boot + first
 executor compile) is the Fig-5 'agent startup' measurement.
+
+Elasticity: a pilot's slice is no longer frozen at creation.  The
+PilotManager's :class:`ControlPlane` moves chips between pilots at
+runtime — :meth:`Pilot.surrender_devices` is the drain-aware shrink
+(scheduler stops new binds, running CUs finish or are preempted) and
+:meth:`Pilot.absorb_devices` the live grow (queued gang CUs bind onto
+the new slots mid-run).
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 from jax.sharding import Mesh
 
 from .agent import Agent
+from .control_plane import ControlPlane
 from .dataplane import DataPlane
 from .resource_manager import ResourceManager
 
@@ -42,6 +50,8 @@ class PilotDescription:
     runtime: str = "hpc"              # 'hpc' | 'analytics' (Mode I vs II seed)
     reuse_app_master: bool = True
     app_master_overhead_s: float = 0.0
+    n_spawners: Optional[int] = None  # executor threads (None: auto-size)
+    enable_speculation: bool = True
 
 
 class Pilot:
@@ -61,9 +71,11 @@ class Pilot:
     def start(self) -> "Pilot":
         self.state = PilotState.PENDING
         self.timings["t_pending"] = time.monotonic()
-        self.devices = self.rm.lease(self.desc.n_chips, self.uid)
+        self.devices = self.rm.grant(self.desc.n_chips, self.uid)
         self.agent = Agent(self, reuse_app_master=self.desc.reuse_app_master,
-                           app_master_overhead_s=self.desc.app_master_overhead_s)
+                           app_master_overhead_s=self.desc.app_master_overhead_s,
+                           n_spawners=self.desc.n_spawners,
+                           enable_speculation=self.desc.enable_speculation)
         self.agent.start()
         self.state = PilotState.ACTIVE
         self.timings["t_active"] = time.monotonic()
@@ -90,8 +102,9 @@ class Pilot:
     # ------------------------------------------------------------ Mode I
     def spawn_analytics_cluster(self, n_chips: int, **kw):
         """Carve an on-demand analytics cluster out of this pilot (Mode I,
-        'Hadoop on HPC'). Chips come from this pilot's free slots and are
-        returned on ``AnalyticsCluster.shutdown()``."""
+        'Hadoop on HPC'). Chips come from the scheduler's public
+        ``carve_out`` API (HBM accounted) and are restored on
+        ``AnalyticsCluster.shutdown()``."""
         from .modes import AnalyticsCluster
         assert self.agent is not None
         idxs = self.agent.reserve_chips(n_chips)
@@ -100,6 +113,42 @@ class Pilot:
         return cluster
 
     # ----------------------------------------------------------- elasticity
+    def absorb_devices(self, devices: Sequence) -> None:
+        """Live grow: the ControlPlane granted us chips — extend the
+        slice and hand the slots to the scheduler (queued gang CUs can
+        bind on them mid-run)."""
+        assert self.agent is not None
+        if not devices:
+            return
+        with self._lock:
+            self.devices.extend(devices)
+        self.agent.scheduler.add_devices(devices)
+        self.agent._wake.set()
+
+    def forget_devices(self, devices: Sequence) -> None:
+        """Drop drained devices from the slice (count-aware: dry-run
+        slices may alias one physical device many times)."""
+        with self._lock:
+            for d in devices:
+                if d in self.devices:
+                    self.devices.remove(d)
+
+    def surrender_devices(self, n: int, *, preempt_after_s: float = 0.5,
+                          timeout: float = 30.0) -> List:
+        """Drain-aware shrink: pick n chips (idle first), stop new binds,
+        wait for or preempt the CUs on them, and return the freed device
+        objects.  The lease is still held — the caller walks it through
+        ``rm.reclaim`` (the ControlPlane does this in :meth:`~repro.core.
+        control_plane.ControlPlane.move`)."""
+        assert self.agent is not None
+        idxs = self.agent.scheduler.pick_drain_candidates(n)
+        if not idxs:
+            return []
+        devs = self.agent.service_drain(idxs, preempt_after_s=preempt_after_s,
+                                        timeout=timeout)
+        self.forget_devices(devs)
+        return devs
+
     def fail_device(self, device) -> List[str]:
         """Simulate a node failure: removes the device, returns impacted CUs
         (which the agent re-queues per their retry policy)."""
@@ -111,18 +160,16 @@ class Pilot:
         return self.agent.handle_device_loss([device])
 
     def resize(self, n_chips: int) -> None:
-        """Elastic grow/shrink to n_chips."""
+        """Elastic grow/shrink to n_chips through the grant/reclaim
+        lease lifecycle."""
         assert self.agent is not None
         cur = len(self.devices)
         if n_chips > cur:
-            new = self.rm.lease(n_chips - cur, self.uid)
-            self.devices.extend(new)
-            self.agent.scheduler.add_devices(new)
+            self.absorb_devices(self.rm.grant(n_chips - cur, self.uid))
         elif n_chips < cur:
-            drop = self.devices[n_chips:]
-            self.devices = self.devices[:n_chips]
-            self.agent.handle_device_loss(drop)
-            self.rm.release_devices(drop)
+            drop = self.surrender_devices(cur - n_chips)
+            if drop:
+                self.rm.reclaim(self.uid, drop)
 
     def shutdown(self) -> None:
         if self.agent is not None:
@@ -133,11 +180,13 @@ class Pilot:
 
 
 class PilotManager:
-    """Client-side manager for a set of Pilots (paper: Pilot-Manager)."""
+    """Client-side manager for a set of Pilots (paper: Pilot-Manager).
+    Owns the :class:`ControlPlane` that rebalances chips across them."""
 
-    def __init__(self, rm: Optional[ResourceManager] = None):
+    def __init__(self, rm: Optional[ResourceManager] = None, **cp_kwargs):
         self.rm = rm or ResourceManager()
         self.pilots: List[Pilot] = []
+        self.control_plane = ControlPlane(self, **cp_kwargs)
 
     def submit(self, desc: PilotDescription,
                data_registry: Optional[DataPlane] = None) -> Pilot:
@@ -147,6 +196,7 @@ class PilotManager:
         return pilot
 
     def shutdown(self) -> None:
+        self.control_plane.stop()
         for p in self.pilots:
             if p.state is PilotState.ACTIVE:
                 p.shutdown()

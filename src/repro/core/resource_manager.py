@@ -1,13 +1,21 @@
 """System-level resource manager (the SLURM/PBS analogue).
 
-Owns the global device pool and leases contiguous slices to Pilots.
+Owns the global device pool and leases slices to Pilots through an
+explicit grant/reclaim lifecycle: :meth:`grant` moves free devices into
+a pilot's lease, :meth:`reclaim` takes specific devices back (ownership
+checked) — the primitive the ControlPlane composes into cross-pilot
+rebalances (drain cold pilot → reclaim → grant to hot pilot).  Every
+transition is appended to :attr:`lease_events` so "who held what, when"
+is answerable after the fact.
+
 On the CPU dry-run container this manages host devices; on a real pod it
 manages TPU chips — the Pilot layer is agnostic.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 
@@ -22,6 +30,8 @@ class ResourceManager:
         self._failed: set[int] = set()
         self._lock = threading.Lock()
         self.hbm_per_chip = hbm_per_chip
+        self.lease_events: List[Dict[str, Any]] = []
+        self.stats = {"granted": 0, "reclaimed": 0}
 
     @property
     def n_devices(self) -> int:
@@ -32,8 +42,20 @@ class ResourceManager:
             return [i for i in range(len(self._devices))
                     if i not in self._leased and i not in self._failed]
 
-    def lease(self, n: int, pilot_id: str) -> List:
-        """Lease n devices (contiguous-first, like a rack-aware RM)."""
+    def holdings(self, pilot_id: str) -> List[int]:
+        """Device indices currently leased to `pilot_id`."""
+        with self._lock:
+            return sorted(i for i, p in self._leased.items() if p == pilot_id)
+
+    def _log(self, kind: str, pilot_id: Optional[str],
+             idxs: Sequence[int]) -> None:
+        self.lease_events.append({"t": time.monotonic(), "event": kind,
+                                  "pilot": pilot_id, "indices": list(idxs)})
+
+    # ------------------------------------------------------ grant / reclaim
+    def grant(self, n: int, pilot_id: str) -> List:
+        """Grant n free devices to a pilot's lease (contiguous-first,
+        like a rack-aware RM). Raises if the pool cannot cover it."""
         with self._lock:
             free = [i for i in range(len(self._devices))
                     if i not in self._leased and i not in self._failed]
@@ -43,18 +65,56 @@ class ResourceManager:
             take = free[:n]
             for i in take:
                 self._leased[i] = pilot_id
+            self.stats["granted"] += n
+            self._log("grant", pilot_id, take)
             return [self._devices[i] for i in take]
 
-    def release(self, pilot_id: str) -> None:
+    def lease(self, n: int, pilot_id: str) -> List:
+        """Back-compat alias for :meth:`grant`."""
+        return self.grant(n, pilot_id)
+
+    def reclaim(self, pilot_id: Optional[str], devices: Sequence) -> List[int]:
+        """Take specific devices back from a pilot's lease.  When
+        `pilot_id` is given, ownership is verified — reclaiming a device
+        the pilot does not hold raises. Returns the reclaimed indices.
+
+        Dry-run pools repeat one physical device object across many
+        lease slots, so each handed-back device releases ONE matching
+        leased index (the pilot's own when `pilot_id` is given)."""
         with self._lock:
+            taken: List[int] = []
+            for d in devices:
+                i = next((i for i, dev in enumerate(self._devices)
+                          if i not in taken and id(dev) == id(d)
+                          and self._leased.get(i) is not None
+                          and (pilot_id is None
+                               or self._leased[i] == pilot_id)), None)
+                if i is None:
+                    if pilot_id is not None:
+                        raise ValueError(
+                            f"{pilot_id!r} holds no lease on {d!r}")
+                    continue
+                del self._leased[i]
+                taken.append(i)
+            if taken:
+                self.stats["reclaimed"] += len(taken)
+                self._log("reclaim", pilot_id, taken)
+            return taken
+
+    # ------------------------------------------------------------- release
+    def release(self, pilot_id: str) -> None:
+        """Drop a pilot's entire lease (pilot shutdown)."""
+        with self._lock:
+            gone = [i for i, p in self._leased.items() if p == pilot_id]
             self._leased = {i: p for i, p in self._leased.items()
                             if p != pilot_id}
+            if gone:
+                self.stats["reclaimed"] += len(gone)
+                self._log("release", pilot_id, gone)
 
     def release_devices(self, devices: Sequence) -> None:
-        idx = {id(d): i for i, d in enumerate(self._devices)}
-        with self._lock:
-            for d in devices:
-                self._leased.pop(idx.get(id(d), -1), None)
+        """Unlease specific devices without an ownership check."""
+        self.reclaim(None, devices)
 
     def mark_failed(self, device) -> None:
         """Simulated node failure: device leaves the pool permanently."""
@@ -62,5 +122,6 @@ class ResourceManager:
         with self._lock:
             i = idx.get(id(device))
             if i is not None:
+                holder = self._leased.pop(i, None)
                 self._failed.add(i)
-                self._leased.pop(i, None)
+                self._log("failed", holder, [i])

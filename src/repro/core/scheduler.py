@@ -8,14 +8,23 @@ Mirrors the paper's description of resource management on YARN:
     ``reuse_app_master=True`` amortizes phase 1 across CUs of the same
     app — the paper's stated future optimization, implemented here;
   * gang scheduling: HPC-stage CUs get all requested chips atomically or
-    wait (what YARN could not do, motivating Mode II);
+    wait (what YARN could not do, motivating Mode II); a gang CU that
+    waits too long gets an aging *reservation* — freed chips are parked
+    for it instead of leaking to smaller CUs (YARN's container
+    reservations, which stop large requests starving behind small ones);
   * data locality: candidate device sets are scored against the CU's
     PilotData placement; scheduling is delayed up to
     ``locality_delay_rounds`` in the hope a local slot frees up (YARN's
-    delay scheduling), after which it falls back to any slot.
+    delay scheduling), after which it falls back to any slot;
+  * elasticity: devices can be carved out (Mode-I analytics clusters,
+    :meth:`carve_out`/:meth:`restore`), marked DRAINING for a
+    ControlPlane rebalance (:meth:`begin_drain`/:meth:`finish_drain` —
+    no new binds, running CUs finish or are preempted), or added live
+    (:meth:`add_devices`).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -26,12 +35,24 @@ from .dataplane import DataPlane
 APP_MASTER_CHIPS = 1  # phase-1 reservation size (YARN AppMaster container)
 
 
+def mem_per_chip(memory_bytes: Optional[int], n_chips: int) -> int:
+    """Per-chip HBM share of a CU's memory request, rounded UP.
+
+    Floor division dropped the remainder, so an n-chip CU asking for
+    ``m`` bytes was admitted against only ``n * (m // n)`` — chips could
+    oversubscribe by up to ``n - 1`` bytes per CU. Ceil keeps admission
+    and release symmetric and never under-accounts.
+    """
+    return -((memory_bytes or 0) // -max(n_chips, 1))
+
+
 class YarnStyleScheduler:
     def __init__(self, devices: Sequence, hbm_per_chip: int,
                  data_registry: Optional[DataPlane] = None, *,
                  reuse_app_master: bool = True,
                  locality_delay_rounds: int = 3,
-                 app_master_overhead_s: float = 0.0):
+                 app_master_overhead_s: float = 0.0,
+                 gang_reservation_rounds: int = 8):
         self._devices = list(devices)
         self._hbm = hbm_per_chip
         self._free: Set[int] = set(range(len(self._devices)))
@@ -41,13 +62,27 @@ class YarnStyleScheduler:
         self._running: Dict[str, List[int]] = {}
         self._app_masters: Dict[str, int] = {}     # app_id -> device idx
         self._skip_counts: Dict[str, int] = {}
+        # --- elastic device states (disjoint from _free) ---
+        self._draining: Set[int] = set()    # no new binds; leaving the pilot
+        self._carved: Set[int] = set()      # Mode-I carve-out (will return)
+        # --- gang reservation (aging): freed chips park for one starved gang
+        self._gang_res_uid: Optional[str] = None
+        self._gang_res_chips: Set[int] = set()
+        self._gang_res_need: int = 0
+        self._gang_waits: Dict[str, int] = {}
+        self._running_gangs: Dict[str, int] = {}  # uid -> gang size
+        # --- binding generations guard stale releases (retry/speculation)
+        self._bound_gen: Dict[str, int] = {}
+        self._gen = itertools.count(1)
         self.reuse_app_master = reuse_app_master
         self.locality_delay_rounds = locality_delay_rounds
         self.app_master_overhead_s = app_master_overhead_s
+        self.gang_reservation_rounds = gang_reservation_rounds
         self.data = data_registry or DataPlane()
         self._lock = threading.Lock()
         self.stats = {"scheduled": 0, "locality_hits": 0, "locality_misses": 0,
-                      "app_masters_started": 0, "app_masters_reused": 0}
+                      "app_masters_started": 0, "app_masters_reused": 0,
+                      "gang_reservations": 0, "carved_out": 0, "drained": 0}
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, cu: ComputeUnit) -> None:
@@ -59,13 +94,36 @@ class YarnStyleScheduler:
     def devices_of(self, idxs: Sequence[int]) -> List:
         return [self._devices[i] for i in idxs]
 
+    def pending_cus(self) -> List[ComputeUnit]:
+        """Snapshot of queued CUs (PENDING/RESERVED), taken under the lock."""
+        with self._lock:
+            return [c for c in self._queue
+                    if c.state in (CUState.PENDING, CUState.RESERVED)]
+
+    def running_assignments(self) -> Dict[str, List[int]]:
+        """Snapshot of uid -> bound device indices, taken under the lock."""
+        with self._lock:
+            return {uid: list(idxs) for uid, idxs in self._running.items()}
+
+    def binding_gen(self, cu: ComputeUnit) -> Optional[int]:
+        """Generation token of the CU's current binding; pass it back to
+        :meth:`release` so a stale executor can't free a newer binding."""
+        with self._lock:
+            return self._bound_gen.get(cu.uid)
+
     # ------------------------------------------------------------ placement
+    def _bindable(self, cu: ComputeUnit) -> Set[int]:
+        """Chips this CU may bind: the free pool, plus its own gang
+        reservation if it holds one."""
+        if self._gang_res_uid == cu.uid:
+            return self._free | self._gang_res_chips
+        return set(self._free)
+
     def _candidate(self, cu: ComputeUnit) -> Optional[List[int]]:
         """Pick device indices for a CU, honoring slots + locality."""
         need = cu.desc.n_chips
-        mem = cu.desc.memory_bytes or 0
-        mem_per = mem // max(need, 1)
-        eligible = [i for i in sorted(self._free)
+        mem_per = mem_per_chip(cu.desc.memory_bytes, need)
+        eligible = [i for i in sorted(self._bindable(cu))
                     if self._mem_free[i] >= mem_per]
         if len(eligible) < need:
             return None
@@ -107,9 +165,10 @@ class YarnStyleScheduler:
         app = cu.desc.app_id or cu.uid
         # phase 1: AppMaster reservation
         if app not in self._app_masters:
-            if not self._free:
+            pool = self._bindable(cu)
+            if not pool:
                 return None
-            am = min(self._free)
+            am = min(pool)
             self._app_masters[app] = am
             self.stats["app_masters_started"] += 1
             if self.app_master_overhead_s:
@@ -121,29 +180,81 @@ class YarnStyleScheduler:
         cand = self._candidate(cu)
         if cand is None:
             return None
-        mem_per = (cu.desc.memory_bytes or 0) // max(cu.desc.n_chips, 1)
+        mem_per = mem_per_chip(cu.desc.memory_bytes, cu.desc.n_chips)
         for i in cand:
             self._free.discard(i)
+            self._gang_res_chips.discard(i)
             self._mem_free[i] -= mem_per
+        if self._gang_res_uid == cu.uid:
+            self._clear_gang_reservation()
         self._running[cu.uid] = cand
+        self._bound_gen[cu.uid] = next(self._gen)
+        self._gang_waits.pop(cu.uid, None)
+        if cu.desc.gang:
+            self._running_gangs[cu.uid] = cu.desc.n_chips
         self.stats["scheduled"] += 1
         return cand
+
+    def _note_gang_wait(self, cu: ComputeUnit) -> None:
+        """A gang CU missed another round; after enough aging, start a
+        reservation so freed chips stop leaking to smaller CUs."""
+        waits = self._gang_waits.get(cu.uid, 0) + 1
+        self._gang_waits[cu.uid] = waits
+        if (waits >= self.gang_reservation_rounds
+                and self._gang_res_uid is None):
+            self._gang_res_uid = cu.uid
+            self._gang_res_need = cu.desc.n_chips
+            self._gang_res_chips = set()
+            self.stats["gang_reservations"] += 1
+            # seed the reservation from whatever is free right now
+            while (self._free
+                   and len(self._gang_res_chips) < self._gang_res_need):
+                self._gang_res_chips.add(self._free.pop())
+
+    def _clear_gang_reservation(self) -> None:
+        for i in self._gang_res_chips:
+            self._free.add(i)
+        self._gang_res_chips = set()
+        self._gang_res_uid = None
+        self._gang_res_need = 0
+
+    def _offer_freed_chip(self, i: int) -> None:
+        """A chip became available: feed the gang reservation first."""
+        if (self._gang_res_uid is not None
+                and len(self._gang_res_chips) < self._gang_res_need):
+            self._gang_res_chips.add(i)
+        else:
+            self._free.add(i)
+
+    def _capacity(self) -> int:
+        """Live bindable slot count (carved chips will return; draining
+        and removed ones will not)."""
+        return len(self._mem_free) - len(self._draining)
 
     def try_schedule(self) -> List[Tuple[ComputeUnit, List[int]]]:
         """One scheduling round: returns newly-bound (cu, device idxs)."""
         out = []
         with self._lock:
+            # a reservation whose holder left the queue is stale
+            if (self._gang_res_uid is not None
+                    and all(c.uid != self._gang_res_uid for c in self._queue)):
+                self._clear_gang_reservation()
             remaining = []
             for cu in self._queue:
                 if cu.state is CUState.CANCELED:
+                    if self._gang_res_uid == cu.uid:
+                        self._clear_gang_reservation()
                     continue
-                if cu.desc.gang and cu.desc.n_chips > len(self._devices):
+                if cu.desc.gang and cu.desc.n_chips > self._capacity():
                     cu.error = RuntimeError(
-                        f"gang of {cu.desc.n_chips} > pilot size {len(self._devices)}")
+                        f"gang of {cu.desc.n_chips} > pilot size "
+                        f"{self._capacity()}")
                     cu._set_state(CUState.FAILED)
                     continue
                 cand = self._admit(cu)
                 if cand is None:
+                    if cu.desc.gang:
+                        self._note_gang_wait(cu)
                     remaining.append(cu)
                 else:
                     out.append((cu, cand))
@@ -158,32 +269,143 @@ class YarnStyleScheduler:
         Returns victim uids (lowest priority first) or [] if impossible.
         The paper notes YARN 'can preempt containers in high-load
         situations' — the agent re-queues victims (bounded by retries)."""
-        need = cu.desc.n_chips - len(self._free)
-        if need <= 0:
-            return []
-        candidates = sorted(
-            ((v, self._running.get(v.uid, [])) for v in running.values()
-             if v.state is CUState.RUNNING
-             and v.desc.priority < cu.desc.priority
-             and not v.desc.gang),
-            key=lambda pair: pair[0].desc.priority)
-        victims, freed = [], 0
-        for v, idxs in candidates:
-            victims.append(v.uid)
-            freed += len(idxs)
-            if freed >= need:
-                return victims
-        return []
-
-    def release(self, cu: ComputeUnit) -> None:
         with self._lock:
-            idxs = self._running.pop(cu.uid, [])
-            mem_per = (cu.desc.memory_bytes or 0) // max(cu.desc.n_chips, 1)
+            need = cu.desc.n_chips - len(self._free)
+            if need <= 0:
+                return []
+            candidates = sorted(
+                ((v, self._running.get(v.uid, [])) for v in running.values()
+                 if v.state is CUState.RUNNING
+                 and v.desc.priority < cu.desc.priority
+                 and not v.desc.gang),
+                key=lambda pair: pair[0].desc.priority)
+            victims, freed = [], 0
+            for v, idxs in candidates:
+                victims.append(v.uid)
+                freed += len(idxs)
+                if freed >= need:
+                    return victims
+            return []
+
+    def release(self, cu: ComputeUnit, *, gen: Optional[int] = None) -> None:
+        """Return a CU's slots. Idempotent: a second release of the same
+        binding is a no-op, and a stale ``gen`` token (the binding was
+        already released and the CU re-admitted, e.g. the retry or
+        speculation paths) never frees the newer binding."""
+        with self._lock:
+            if gen is not None and self._bound_gen.get(cu.uid) != gen:
+                return
+            idxs = self._running.pop(cu.uid, None)
+            self._bound_gen.pop(cu.uid, None)
+            self._running_gangs.pop(cu.uid, None)
+            if not idxs:
+                return
+            mem_per = mem_per_chip(cu.desc.memory_bytes, cu.desc.n_chips)
             for i in idxs:
-                self._free.add(i)
+                if i not in self._mem_free:
+                    continue                      # slot was removed mid-run
                 self._mem_free[i] += mem_per
+                if i in self._draining or i in self._carved:
+                    continue                      # not bindable again
+                self._offer_freed_chip(i)
             if not self.reuse_app_master:
                 self._app_masters.pop(cu.desc.app_id or cu.uid, None)
+
+    # ------------------------------------------------------------ carve-out
+    def carve_out(self, n: int, timeout: float = 30.0) -> List[int]:
+        """Take n free chips (with their full HBM) out of the slot table —
+        the Mode-I analytics carve-out. Blocks until n chips are free or
+        the timeout expires. Returns the carved indices."""
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                avail = sorted(self._free)
+                if len(avail) >= n:
+                    take = avail[:n]
+                    for i in take:
+                        self._free.discard(i)
+                        self._carved.add(i)
+                        self._mem_free[i] = 0   # the chip's HBM goes with it
+                    self.stats["carved_out"] += n
+                    return take
+            if time.monotonic() >= deadline:
+                raise RuntimeError(f"could not carve out {n} chips (busy)")
+            time.sleep(0.01)
+
+    def restore(self, idxs: Sequence[int]) -> None:
+        """Return carved-out chips (and their HBM) to the slot table.
+        Idempotent: restoring a chip that is not carved is a no-op."""
+        with self._lock:
+            for i in idxs:
+                if i not in self._carved:
+                    continue
+                self._carved.discard(i)
+                self._mem_free[i] = self._hbm
+                self._offer_freed_chip(i)
+
+    # -------------------------------------------------------------- drain
+    def begin_drain(self, idxs: Sequence[int]) -> List[str]:
+        """Mark devices DRAINING: they take no new binds and leave the
+        pilot when idle. Returns uids of CUs currently running on them
+        (the agent decides whether to wait or preempt)."""
+        with self._lock:
+            target = {i for i in idxs if i in self._mem_free}
+            for i in target:
+                self._free.discard(i)
+                self._gang_res_chips.discard(i)
+                self._draining.add(i)
+            if (self._gang_res_uid is not None
+                    and self._gang_res_need > self._capacity()):
+                self._clear_gang_reservation()  # can never fill now
+            return [uid for uid, assigned in self._running.items()
+                    if target & set(assigned)]
+
+    def drain_idle(self, idxs: Sequence[int]) -> bool:
+        """True when no running CU still occupies any of `idxs`."""
+        with self._lock:
+            busy = {i for assigned in self._running.values() for i in assigned}
+            return not (set(idxs) & busy)
+
+    def finish_drain(self, idxs: Sequence[int]) -> List:
+        """Drop DRAINING slots from the table; returns their device
+        objects (for the lease reclaim). Only completes chips that were
+        actually marked by :meth:`begin_drain`."""
+        with self._lock:
+            devs = []
+            for i in idxs:
+                if i not in self._draining:
+                    continue
+                self._draining.discard(i)
+                self._mem_free.pop(i, None)
+                devs.append(self._devices[i])
+            self.stats["drained"] += len(devs)
+            return devs
+
+    def max_gang_demand(self) -> int:
+        """Largest gang CU currently running or queued.  The ControlPlane
+        never drains a pilot below this: an elective rebalance must not
+        turn a viable gang into a permanent 'too big for the pilot'
+        failure (chips lost to a drain do not come back on their own)."""
+        with self._lock:
+            demands = [c.desc.n_chips for c in self._queue
+                       if c.desc.gang and not c.done]
+            demands.extend(self._running_gangs.values())
+            return max(demands, default=0)
+
+    def pick_drain_candidates(self, n: int) -> List[int]:
+        """Choose up to n chips to drain: idle chips first, then the
+        least-loaded running ones. Carved, reserved and already-draining
+        chips are never picked."""
+        with self._lock:
+            cands = sorted(self._free, reverse=True)[:n]
+            if len(cands) < n:
+                load: Dict[int, int] = {}
+                for assigned in self._running.values():
+                    for i in assigned:
+                        load[i] = load.get(i, 0) + 1
+                busy = sorted(load, key=lambda i: (load[i], -i))
+                cands += [i for i in busy if i not in cands][: n - len(cands)]
+            return cands[:n]
 
     # ------------------------------------------------------------- elastic
     def remove_devices(self, idxs: Sequence[int]) -> List[str]:
@@ -192,6 +414,9 @@ class YarnStyleScheduler:
         with self._lock:
             for i in idxs:
                 self._free.discard(i)
+                self._draining.discard(i)
+                self._carved.discard(i)
+                self._gang_res_chips.discard(i)
                 self._mem_free.pop(i, None)
             for uid, assigned in list(self._running.items()):
                 if set(assigned) & set(idxs):
@@ -203,10 +428,32 @@ class YarnStyleScheduler:
             base = len(self._devices)
             self._devices.extend(devices)
             for j in range(len(devices)):
-                self._free.add(base + j)
                 self._mem_free[base + j] = self._hbm
+                self._offer_freed_chip(base + j)
 
+    # ---------------------------------------------------------------- stats
     @property
     def n_free(self) -> int:
         with self._lock:
             return len(self._free)
+
+    @property
+    def n_slots(self) -> int:
+        with self._lock:
+            return self._capacity()
+
+    def backlog(self) -> Dict[str, int]:
+        """Pressure inputs for the ControlPlane's heartbeat poll."""
+        with self._lock:
+            queued = [c for c in self._queue if not c.done]
+            busy = sum(len(v) for v in self._running.values())
+            return {
+                "queue_len": len(queued),
+                "queued_chip_demand": sum(c.desc.n_chips for c in queued),
+                "n_free": len(self._free),
+                "n_slots": self._capacity(),
+                "busy_chips": busy,
+                "n_running": len(self._running),
+                "n_draining": len(self._draining),
+                "n_carved": len(self._carved),
+            }

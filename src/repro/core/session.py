@@ -40,7 +40,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .compute_unit import ComputeUnitDescription
-from .dataplane import DataPlane, Lineage, Link, TransferCostModel
+from .dataplane import (DataPlane, Lineage, Link, TransferCostModel,
+                        replicated_sharding)
 from .pilot import Pilot, PilotDescription, PilotManager
 from .resource_manager import ResourceManager
 
@@ -88,6 +89,7 @@ class Session:
         self.cost_model = cost_model or TransferCostModel()
         self.dataplane = DataPlane(cost_model=self.cost_model)
         self.pm = PilotManager(rm)
+        self.control_plane = self.pm.control_plane  # elastic rebalancing
         self.pilots: Dict[str, Pilot] = {}          # pilot name -> Pilot
         self.results: Dict[str, Any] = {}           # stage name -> return
         self.placements: Dict[str, Dict[str, Any]] = {}
@@ -133,16 +135,41 @@ class Session:
                 "movement_cost": move, "affinity": affinity,
                 "total": affinity + loc - move}
 
+    def _effective_chips(self, pilot: Pilot) -> int:
+        """Capacity the placer may count on: the pilot's slice minus any
+        chips an in-flight ControlPlane resize is already draining away
+        (pending grows are not counted until the slots actually land)."""
+        delta = self.control_plane.pending_delta(pilot.uid)
+        return len(pilot.devices) + min(0, delta)
+
     def place(self, stage: Stage) -> Tuple[Pilot, Dict[str, Any]]:
         cands = self._compatible(stage)
         if not cands:
             raise RuntimeError(
                 f"no compatible pilot for {stage.kind} stage {stage.name!r}")
-        scored = [(self.score(stage, p), p) for p in cands]
+        need = stage.n_chips or 1
+        fits = [p for p in cands if self._effective_chips(p) >= need]
+        rebalanced = 0
+        if not fits:
+            # unplaceable as-is: ask the ControlPlane to reshape the
+            # pilot set — free the deficit from the coldest pilots and
+            # grant it to the best-scoring candidate
+            target = max(cands, key=lambda p: self.score(stage, p)["total"])
+            rebalanced = self.control_plane.grow(
+                target, need - self._effective_chips(target),
+                reason=f"stage:{stage.name}")
+            if self._effective_chips(target) >= need:
+                fits = [target]
+        if not fits:
+            fits = cands        # last resort: legacy behavior (a gang CU
+            #                     too big for every pilot fails fast below)
+        scored = [(self.score(stage, p), p) for p in fits]
         best_score, best = max(scored, key=lambda sp: sp[0]["total"])
         decision = {"pilot": best.desc.name, "pilot_uid": best.uid,
                     "scores": {p.desc.name: s for s, p in scored},
                     "chosen": best_score}
+        if rebalanced:
+            decision["rebalanced_chips"] = rebalanced
         return best, decision
 
     # ----------------------------------------------------------------- DAG
@@ -244,7 +271,7 @@ class Session:
             # not double-move (and double-count) a shared input
             with self._move_lock:
                 if self.dataplane.resident_on(name, pilot.uid) is False:
-                    sharding = NamedSharding(pilot.mesh(), P())
+                    sharding = replicated_sharding(pilot.devices)
                     _, nbytes = self.dataplane.move_to_pilot(
                         name, pilot.uid, sharding, link=Link.DCN,
                         reason=f"stage:{stage.name}")
@@ -265,7 +292,10 @@ class Session:
         return kwargs
 
     def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float) -> Any:
-        n = stage.n_chips or len(pilot.devices)
+        # whole-pilot stages size to the scheduler's LIVE slot count, not
+        # len(devices): chips draining away are still in the device list
+        # but a gang that counts them would fail fast
+        n = stage.n_chips or max(pilot.agent.scheduler.n_slots, 1)
 
         def job(mesh=None):
             return stage.fn(**self._call_kwargs(stage, {"mesh": mesh}))
@@ -273,7 +303,9 @@ class Session:
         cu = pilot.submit(ComputeUnitDescription(
             fn=job, gang=stage.gang, n_chips=n, tag=f"stage:{stage.name}",
             data=tuple(stage.inputs), app_id=f"session:{stage.kind}"))
-        return cu.wait(timeout)
+        # follow(): a ControlPlane drain may preempt the CU and forward
+        # to a re-queued clone — the stage result is the chain's end
+        return cu.follow(timeout)
 
     def _run_analytics(self, stage: Stage, pilot: Pilot,
                        decision: Dict[str, Any], timeout: float) -> Any:
@@ -286,10 +318,11 @@ class Session:
 
             cu = pilot.submit(ComputeUnitDescription(
                 fn=job, gang=stage.gang,
-                n_chips=stage.n_chips or len(pilot.devices),
+                n_chips=stage.n_chips
+                or max(pilot.agent.scheduler.n_slots, 1),
                 tag=f"stage:{stage.name}", data=tuple(stage.inputs),
                 needs_mesh=False, app_id="session:analytics"))
-            return cu.wait(timeout)
+            return cu.follow(timeout)
         # Mode I: carve an on-demand analytics cluster out of the HPC
         # pilot holding the data (compute goes to the data).
         decision["mode"] = "mode1-carve"
@@ -304,12 +337,16 @@ class Session:
 
     def _engine_for(self, pilot: Pilot):
         from repro.analytics.engine import AnalyticsEngine
+        # keyed by the pilot's CURRENT device slice: an elastic resize
+        # invalidates the cached engine, whose mesh would otherwise keep
+        # pointing at chips the lease no longer covers
+        key = tuple(id(d) for d in pilot.devices)
         with self._lock:
-            eng = self._engines.get(pilot.uid)
-            if eng is None:
-                eng = AnalyticsEngine(pilot.mesh(), self.dataplane)
-                self._engines[pilot.uid] = eng
-        return eng
+            cached = self._engines.get(pilot.uid)
+            if cached is None or cached[0] != key:
+                cached = (key, AnalyticsEngine(pilot.mesh(), self.dataplane))
+                self._engines[pilot.uid] = cached
+        return cached[1]
 
     def _store_outputs(self, stage: Stage, pilot: Pilot, result: Any) -> None:
         """Publish declared outputs to the DataPlane, homed on the pilot
@@ -329,9 +366,9 @@ class Session:
                 f"stage {stage.name!r} declared outputs {missing} but did "
                 "not return them")
         lineage = Lineage(stage=stage.name, inputs=tuple(stage.inputs))
+        sharding = replicated_sharding(pilot.devices)
         for name, val in pairs:
-            arr = jax.device_put(jnp.asarray(val),
-                                 NamedSharding(pilot.mesh(), P()))
+            arr = jax.device_put(jnp.asarray(val), sharding)
             self.dataplane.put(name, arr, pilot=pilot.uid, lineage=lineage)
 
     # ------------------------------------------------------------- recovery

@@ -1,0 +1,430 @@
+"""Elastic ControlPlane behaviour: drain-aware shrink, live grow, gang
+reservations, the carve-out API, HBM ceil accounting, and cross-pilot
+rebalancing with DataPlane eviction (the paper's 'dynamic resource
+management' made testable)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeUnitDescription, CUState, PilotDescription,
+                        PilotManager, ResourceManager, Session,
+                        analytics_stage, hpc_stage)
+from repro.core.compute_unit import ComputeUnit
+from repro.core.dataplane import DataPlane, Link
+from repro.core.scheduler import YarnStyleScheduler, mem_per_chip
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.i = i
+        self.platform = "fake"
+
+
+def make_sched(n=4, hbm=16, **kw):
+    kw.setdefault("locality_delay_rounds", 0)
+    return YarnStyleScheduler([FakeDevice(i) for i in range(n)], hbm, **kw)
+
+
+def cu_of(n_chips=1, *, gang=False, memory_bytes=0, priority=0):
+    return ComputeUnit(ComputeUnitDescription(
+        fn=lambda: None, n_chips=n_chips, gang=gang,
+        memory_bytes=memory_bytes, priority=priority))
+
+
+# ----------------------------------------------------------- carve-out API
+def test_carve_out_and_restore_with_hbm_accounting():
+    sched = make_sched(4, hbm=16)
+    take = sched.carve_out(2)
+    assert len(take) == 2 and sched.n_free == 2
+    for i in take:
+        assert i in sched._carved
+        assert sched._mem_free[i] == 0          # the chip's HBM went with it
+    sched.restore(take)
+    assert sched.n_free == 4 and not sched._carved
+    for i in take:
+        assert sched._mem_free[i] == 16
+    sched.restore(take)                          # idempotent
+    assert sched.n_free == 4
+
+
+def test_carve_out_times_out_when_busy():
+    sched = make_sched(1)
+    cu = cu_of(1)
+    sched.submit(cu)
+    assert sched.try_schedule()
+    with pytest.raises(RuntimeError, match="carve out"):
+        sched.carve_out(1, timeout=0.05)
+
+
+def test_agent_reserve_chips_goes_through_carve_out():
+    """Acceptance: Agent.reserve_chips no longer pokes scheduler._free."""
+    pm = PilotManager(ResourceManager(devices=jax.devices() * 2))
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2, name="carve"))
+        idxs = pilot.agent.reserve_chips(1)
+        assert set(idxs) <= pilot.agent.scheduler._carved
+        assert pilot.agent.scheduler.n_free == 1
+        pilot.agent.return_chips(idxs)
+        assert pilot.agent.scheduler.n_free == 2
+        assert not pilot.agent.scheduler._carved
+    finally:
+        pm.shutdown()
+
+
+# -------------------------------------------------------- HBM ceil division
+def test_mem_per_chip_is_ceil():
+    assert mem_per_chip(16, 3) == 6
+    assert mem_per_chip(16, 1) == 16
+    assert mem_per_chip(0, 4) == 0
+    assert mem_per_chip(None, 4) == 0
+
+
+def test_hbm_remainder_not_dropped_on_admission():
+    """Floor division admitted an 11-byte 2-chip CU against 5-byte chips
+    (2 x 5 = 10 < 11). Ceil (6 > 5) must refuse it."""
+    sched = make_sched(2, hbm=5)
+    cu = cu_of(2, memory_bytes=11)
+    sched.submit(cu)
+    assert sched.try_schedule() == []
+    # and a request that exactly fits still binds + releases symmetrically
+    ok = cu_of(2, memory_bytes=10)
+    sched.submit(ok)
+    bound = sched.try_schedule()
+    assert len(bound) == 1
+    ok._set_state(CUState.DONE)
+    sched.release(ok)
+    assert all(m == 5 for m in sched._mem_free.values())
+
+
+# --------------------------------------------------- release double-guard
+def test_stale_generation_release_is_noop():
+    """A stale executor must not free a newer binding of the same CU
+    (the speculation/retry double-release leak)."""
+    sched = make_sched(2)
+    cu = cu_of(1)
+    sched.submit(cu)
+    assert sched.try_schedule()
+    gen1 = sched.binding_gen(cu)
+    sched.release(cu)                    # first (legitimate) release
+    sched.submit(cu)                     # re-queued (retry path)
+    assert sched.try_schedule()          # re-admitted: new binding
+    sched.release(cu, gen=gen1)          # stale token: must be a no-op
+    assert cu.uid in sched._running
+    assert sched.n_free == 1
+    sched.release(cu)                    # current binding releases fine
+    assert sched.n_free == 2
+    sched.release(cu)                    # double release: no-op
+    assert sched.n_free == 2
+
+
+def test_speculation_loser_does_not_clobber_winner_result():
+    """The losing duplicate's late return must not overwrite the result
+    the winner already published."""
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2))
+
+        def fast(mesh=None):
+            time.sleep(0.01)
+            return "ok"
+
+        for _ in range(3):
+            pilot.submit(ComputeUnitDescription(
+                fn=fast, tag="clob", needs_mesh=False)).wait(30)
+
+        gate = {"first": True}
+
+        def racy(mesh=None):
+            if gate["first"]:
+                gate["first"] = False
+                time.sleep(2.0)
+                return "stale-loser-value"
+            return "winner"
+
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=racy, tag="clob", needs_mesh=False))
+        assert cu.wait(30) == "winner"
+        time.sleep(2.2)                    # let the loser thread come back
+        assert cu.result == "winner"
+        assert pilot.agent.scheduler.n_free == 2   # no slot leaked either
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------- preemption safety
+def test_preemption_victims_takes_its_own_lock():
+    sched = make_sched(2)
+    low1, low2 = cu_of(1, priority=0), cu_of(1, priority=0)
+    for c in (low1, low2):
+        sched.submit(c)
+    for c, _ in sched.try_schedule():
+        c._set_state(CUState.RUNNING)
+    high = cu_of(2, priority=5)
+    victims = sched.preemption_victims(
+        high, {low1.uid: low1, low2.uid: low2})
+    assert set(victims) == {low1.uid, low2.uid}
+
+
+# --------------------------------------------------------- drain lifecycle
+def test_begin_drain_stops_new_binds_and_finish_removes_slots():
+    sched = make_sched(4)
+    blocking = sched.begin_drain([2, 3])
+    assert blocking == [] and sched.n_free == 2 and sched.n_slots == 2
+    cu = cu_of(4, gang=True)                 # now too big for the pilot
+    sched.submit(cu)
+    sched.try_schedule()
+    assert cu.state is CUState.FAILED
+    devs = sched.finish_drain([2, 3])
+    assert [d.i for d in devs] == [2, 3]
+    assert sched.n_slots == 2 and 2 not in sched._mem_free
+
+
+def test_shrink_under_load_requeues_onto_survivors():
+    """Drain-with-preempt: CUs running on the leaving chips are canceled,
+    cloned onto surviving slots, and every submission still completes."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=4,
+                                           enable_speculation=False))
+        cus = [pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: (time.sleep(0.15), 1)[1],
+            n_chips=1, tag="shrink", needs_mesh=False)) for _ in range(8)]
+        time.sleep(0.05)                      # let the first wave bind
+        devs = pilot.surrender_devices(2, preempt_after_s=0.0, timeout=10.0)
+        assert len(devs) == 2
+        assert len(pilot.devices) == 2
+        assert pilot.agent.scheduler.n_slots == 2
+        assert sum(cu.follow(30.0) for cu in cus) == 8
+    finally:
+        pm.shutdown()
+
+
+def test_grow_mid_run_binds_queued_gang():
+    """A gang CU queued behind busy chips binds the moment granted slots
+    are absorbed — well before the blockers finish."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2,
+                                           enable_speculation=False))
+        blockers = [pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(1.5) or "blocked",
+            n_chips=1, tag="blk", needs_mesh=False)) for _ in range(2)]
+        time.sleep(0.05)
+        gang = pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: len(mesh.devices.flat),
+            n_chips=2, gang=True, tag="gang"))
+        t0 = time.monotonic()
+        pilot.absorb_devices(rm.grant(2, pilot.uid))
+        assert gang.wait(10.0) == 2
+        assert time.monotonic() - t0 < 1.2     # bound on the NEW slots
+        for b in blockers:
+            assert b.follow(10.0) == "blocked"
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------- gang reservations
+def test_gang_reservation_prevents_starvation():
+    """A stream of small CUs must not starve a queued gang: after the
+    aging threshold, freed chips park in the gang's reservation."""
+    sched = make_sched(2, gang_reservation_rounds=3)
+    running = []
+
+    def feed_small():
+        small = cu_of(1)
+        sched.submit(small)
+        return small
+
+    # one chip is always busy with a small CU: without reservations the
+    # gang never sees 2 simultaneously free chips
+    feed_small()
+    for c, _idxs in sched.try_schedule():
+        running.append(c)
+    gang = cu_of(2, gang=True)
+    sched.submit(gang)
+    bound_gang = False
+    for _ in range(30):
+        feed_small()                    # churn: a new small every round
+        for c, _idxs in sched.try_schedule():
+            if c is gang:
+                bound_gang = True
+            else:
+                running.append(c)
+        if bound_gang:
+            break
+        if running:                     # finish the oldest small CU
+            old = running.pop(0)
+            old._set_state(CUState.DONE)
+            sched.release(old)
+    assert bound_gang, "gang CU starved behind small CUs"
+    assert sched.stats["gang_reservations"] >= 1
+
+
+def test_gang_reservation_cleared_when_holder_cancels():
+    sched = make_sched(2, gang_reservation_rounds=1)
+    blocker = cu_of(1)
+    sched.submit(blocker)
+    sched.try_schedule()
+    gang = cu_of(2, gang=True)
+    sched.submit(gang)
+    for _ in range(3):
+        sched.try_schedule()                 # ages into a reservation
+    assert sched._gang_res_uid == gang.uid
+    gang._set_state(CUState.CANCELED)
+    sched.try_schedule()
+    assert sched._gang_res_uid is None
+    blocker._set_state(CUState.DONE)
+    sched.release(blocker)
+    assert sched.n_free == 2                 # nothing stuck in a dead resv
+
+
+# ------------------------------------------------- heartbeats and pressure
+def test_heartbeat_exports_backlog_metrics():
+    pm = PilotManager(ResourceManager(devices=jax.devices() * 2))
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2))
+        pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(0.05), needs_mesh=False,
+            tag="hb")).wait(30)
+        hb = pilot.agent.heartbeat()
+        for key in ("free_chips", "n_slots", "queue_len",
+                    "queued_chip_demand", "busy_chips", "ema_runtimes"):
+            assert key in hb
+        assert hb["n_slots"] == 2
+        assert "hb" in hb["ema_runtimes"]
+    finally:
+        pm.shutdown()
+
+
+# -------------------------------------------------- cross-pilot rebalance
+def test_rebalance_moves_chips_and_evicts_data():
+    """The full drain → evict → reclaim → grant → absorb pipeline: chips
+    flow cold → hot, the cold pilot's named dataset survives on its
+    shrunken slice, and the moved bytes are itemized on the ledger."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    shared = DataPlane()
+    pm = PilotManager(rm, hysteresis=0.25, drain_preempt_after_s=0.1)
+    try:
+        hot = pm.submit(PilotDescription(n_chips=2, name="hot",
+                                         enable_speculation=False),
+                        data_registry=shared)
+        cold = pm.submit(PilotDescription(n_chips=2, name="cold",
+                                          enable_speculation=False),
+                         data_registry=shared)
+        arr = jax.device_put(np.ones((64, 8), np.float32), cold.devices[0])
+        shared.put("cold-ds", arr, pilot=cold.uid)
+        # back up the hot pilot's queue
+        cus = [hot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(0.05) or 1,
+            n_chips=1, tag="load", needs_mesh=False)) for _ in range(12)]
+        ev = pm.control_plane.rebalance()
+        assert ev is not None and ev.src == cold.uid and ev.dst == hot.uid
+        assert len(hot.devices) == 2 + ev.n_chips
+        assert len(cold.devices) == 2 - ev.n_chips
+        assert rm.holdings(hot.uid) and len(rm.holdings(hot.uid)) == \
+            len(hot.devices)
+        # dataset survived the drain and its movement is on the ledger
+        assert "cold-ds" in shared
+        assert shared.ledger()["by_reason"].get("drain-evict", 0) > 0
+        assert ev.evicted_bytes > 0
+        np.testing.assert_allclose(np.asarray(shared.get("cold-ds").array),
+                                   np.ones((64, 8), np.float32))
+        assert sum(cu.follow(30.0) for cu in cus) == 12
+        # the RM saw an explicit reclaim + grant pair
+        kinds = [e["event"] for e in rm.lease_events]
+        assert "reclaim" in kinds and kinds.count("grant") >= 3
+    finally:
+        pm.shutdown()
+
+
+def test_move_respects_running_gang_floor():
+    """An elective rebalance must not shrink a pilot below its largest
+    running/queued gang — the drain-preempted clone would FAIL fast as
+    'too big for the pilot'."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    pm = PilotManager(rm, drain_preempt_after_s=0.0)
+    try:
+        src = pm.submit(PilotDescription(n_chips=2, name="src",
+                                         enable_speculation=False))
+        dst = pm.submit(PilotDescription(n_chips=2, name="dst",
+                                         enable_speculation=False))
+        gang = src.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(0.3) or len(mesh.devices.flat),
+            n_chips=2, gang=True, tag="gangwork"))
+        time.sleep(0.05)                    # let it bind
+        assert pm.control_plane.move(src, dst, 1, reason="test") is None
+        assert len(src.devices) == 2
+        assert gang.follow(10.0) == 2       # the gang survived intact
+    finally:
+        pm.shutdown()
+
+
+def test_balanced_pilots_do_not_thrash():
+    pm = PilotManager(ResourceManager(devices=jax.devices() * 4),
+                      hysteresis=0.5)
+    try:
+        pm.submit(PilotDescription(n_chips=2, name="a"))
+        pm.submit(PilotDescription(n_chips=2, name="b"))
+        assert pm.control_plane.rebalance() is None     # both idle
+        assert pm.control_plane.events == []
+    finally:
+        pm.shutdown()
+
+
+def test_session_unplaceable_stage_requests_rebalance():
+    """A stage needing more chips than any pilot holds triggers a
+    ControlPlane grow instead of failing the gang fast."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    s = Session(rm)
+    try:
+        s.add_pilot(PilotDescription(n_chips=2, name="a", runtime="hpc",
+                                     enable_speculation=False))
+        s.add_pilot(PilotDescription(n_chips=2, name="b", runtime="hpc",
+                                     enable_speculation=False))
+        out = s.run([hpc_stage(
+            "wide", lambda mesh=None: len(mesh.devices.flat), n_chips=3)])
+        assert out["wide"] == 3
+        place = s.placements["wide"]
+        assert place.get("rebalanced_chips", 0) >= 1
+        chosen = s.pilots[place["pilot"]]
+        assert len(chosen.devices) >= 3
+        assert len(s.pm.control_plane.events) >= 1
+    finally:
+        s.shutdown()
+
+
+def test_drain_keeps_lineage_rematerialization_working():
+    """After a rebalance drains chips from the producing pilot, lineage
+    recovery still re-runs the producer."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    s = Session(rm)
+    try:
+        s.add_pilot(PilotDescription(n_chips=2, name="hpc", runtime="hpc",
+                                     enable_speculation=False))
+        s.add_pilot(PilotDescription(n_chips=2, name="ana",
+                                     runtime="analytics",
+                                     enable_speculation=False))
+
+        def simulate(mesh=None):
+            return {"traj": np.arange(32, dtype=np.float32)}
+
+        s.run([hpc_stage("simulate", simulate, outputs=("traj",))])
+        hpc = s.pilots["hpc"]
+        ana = s.pilots["ana"]
+        ev = s.pm.control_plane.move(hpc, ana, 1, reason="test")
+        assert ev is not None
+        assert "traj" in s.dataplane               # not lost by the drain
+        lost = s.dataplane.drop_pilot_replicas(hpc.uid)
+        assert "traj" in lost
+        s.rematerialize("traj")
+        np.testing.assert_allclose(
+            np.asarray(s.dataplane.get("traj").array),
+            np.arange(32, dtype=np.float32))
+    finally:
+        s.shutdown()

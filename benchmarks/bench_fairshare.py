@@ -1,0 +1,171 @@
+"""Fair-share benchmark: 3 tenants, 6:1:1 offered load, FIFO vs DRF
+(vs Capacity with per-tenant guarantees).
+
+The multi-tenant question the YARN layer exists to answer: tenant `a`
+floods a shared pilot with 6x the work of tenants `b` and `c`, and its
+burst arrives FIRST — the FIFO worst case, where the whole pilot
+head-of-line-blocks on `a` and the small tenants starve.  The same
+workload is replayed under each scheduling policy:
+
+  * ``fifo``     — the single global (-priority, arrival) order;
+  * ``drf``      — dominant-resource fair share over (chips, HBM);
+  * ``capacity`` — per-tenant guaranteed shares (n_slots/3 each) with
+                   reclaim-via-preemption.
+
+A sampler thread reads the scheduler's per-queue backlog every few ms;
+during the *contended window* (every tenant still has queued work) the
+mean chip share per tenant is the convergence measure — DRF should sit
+at ~1/3 each, FIFO at ~1.0 for the flooding tenant.  Per-tenant p99
+queue wait (submit -> first bind) is the starvation measure.
+
+    PYTHONPATH=src python benchmarks/bench_fairshare.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.core import (ComputeUnitDescription, PilotDescription,
+                        PilotManager, QueueConfig, ResourceManager)
+
+TENANTS = ("a", "b", "c")
+LOAD = (6, 1, 1)                 # offered-load multipliers per tenant
+
+
+def run_trial(policy: str, *, n_slots: int, n_tasks: int,
+              task_s: float) -> Dict:
+    rm = ResourceManager(devices=jax.devices() * n_slots)
+    guarantee = n_slots // 3 if policy == "capacity" else 0
+    queues = [QueueConfig(t, guaranteed_chips=guarantee) for t in TENANTS]
+    pm = PilotManager(rm)
+    pilot = pm.submit(PilotDescription(
+        n_chips=n_slots, name="shared", enable_speculation=False,
+        scheduler_policy=policy, queues=queues))
+    sched = pilot.agent.scheduler
+
+    samples: List[Dict[str, tuple]] = []
+    stop = threading.Event()
+
+    def sample() -> None:
+        while not stop.wait(0.004):
+            qb = sched.backlog()["queues"]
+            samples.append({t: (qb.get(t, {}).get("chips_used", 0),
+                                qb.get(t, {}).get("queue_len", 0))
+                            for t in TENANTS})
+
+    def work(mesh=None):
+        time.sleep(task_s)
+        return 1
+
+    cus: Dict[str, List] = {t: [] for t in TENANTS}
+    try:
+        sampler = threading.Thread(target=sample, daemon=True)
+        sampler.start()
+        t0 = time.monotonic()
+        # tenant a's whole flood is queued before b and c arrive
+        for t, mult in zip(TENANTS, LOAD):
+            for _ in range(mult * n_tasks):
+                cus[t].append(pilot.submit(ComputeUnitDescription(
+                    fn=work, n_chips=1, tenant=t, queue=t, tag=f"t-{t}",
+                    needs_mesh=False)))
+        done = sum(cu.follow(300.0) for lst in cus.values() for cu in lst)
+        makespan = time.monotonic() - t0
+        stop.set()
+        sampler.join(timeout=1.0)
+        total = sum(len(lst) for lst in cus.values())
+        assert done == total, f"lost work: {done}/{total}"
+
+        contended = [s for s in samples
+                     if all(s[t][1] > 0 for t in TENANTS)]
+        shares = {}
+        for t in TENANTS:
+            vals = [s[t][0] / max(sum(s[u][0] for u in TENANTS), 1)
+                    for s in contended]
+            shares[t] = float(np.mean(vals)) if vals else float("nan")
+        p99 = {}
+        for t in TENANTS:
+            waits = [w for w in (cu.overhead_s() for cu in cus[t])
+                     if w is not None]
+            p99[t] = float(np.percentile(waits, 99)) if waits else 0.0
+        return {
+            "policy": policy,
+            "makespan_s": makespan,
+            "shares": shares,
+            "p99_wait_s": p99,
+            "contended_samples": len(contended),
+            "reclaims": sched.stats.get("capacity_reclaimed", 0),
+        }
+    finally:
+        pm.shutdown()
+
+
+def sweep(*, policies=("fifo", "drf", "capacity"), n_slots=12, n_tasks=12,
+          task_s=0.05) -> List[Dict]:
+    return [run_trial(p, n_slots=n_slots, n_tasks=n_tasks, task_s=task_s)
+            for p in policies]
+
+
+def run(smoke: bool = True) -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'fairshare')."""
+    kw = dict(n_slots=6, n_tasks=6, task_s=0.02) if smoke else {}
+    rows = []
+    for r in sweep(**kw):
+        small_p99 = max(r["p99_wait_s"]["b"], r["p99_wait_s"]["c"])
+        rows.append({
+            "name": f"fairshare/{r['policy']}",
+            "us_per_call": r["makespan_s"] * 1e6,
+            "derived": (
+                "shares=" + "/".join(f"{r['shares'][t]:.2f}"
+                                     for t in TENANTS)
+                + f" small_p99_s={small_p99:.3f}"
+                + f" reclaims={r['reclaims']}"),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds)")
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--tasks", type=int, default=None,
+                    help="small-tenant task count (a gets 6x)")
+    ap.add_argument("--task-s", type=float, default=None)
+    args = ap.parse_args()
+
+    kw = dict(n_slots=6, n_tasks=6, task_s=0.02) if args.smoke else {}
+    if args.slots is not None:
+        kw["n_slots"] = args.slots
+    if args.tasks is not None:
+        kw["n_tasks"] = args.tasks
+    if args.task_s is not None:
+        kw["task_s"] = args.task_s
+
+    rows = sweep(**kw)
+    hdr = (f"{'policy':>9} {'makespan_s':>11} "
+           f"{'share a/b/c (contended)':>24} "
+           f"{'p99 wait a/b/c (s)':>21} {'reclaims':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        sh = "/".join(f"{r['shares'][t]:.2f}" for t in TENANTS)
+        pw = "/".join(f"{r['p99_wait_s'][t]:.2f}" for t in TENANTS)
+        print(f"{r['policy']:>9} {r['makespan_s']:>11.3f} {sh:>24} "
+              f"{pw:>21} {r['reclaims']:>8d}")
+    by_policy = {r["policy"]: r for r in rows}
+    if {"fifo", "drf"} <= set(by_policy):
+        fifo, drf = by_policy["fifo"], by_policy["drf"]
+        small = lambda r: max(r["p99_wait_s"]["b"], r["p99_wait_s"]["c"])  # noqa: E731
+        print(f"\nDRF contended shares "
+              + "/".join(f"{drf['shares'][t]:.2f}" for t in TENANTS)
+              + " (fair = 0.33 each); small-tenant p99 wait "
+              f"{small(drf):.3f}s vs {small(fifo):.3f}s under FIFO.")
+
+
+if __name__ == "__main__":
+    main()

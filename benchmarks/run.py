@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig6      — K-Means scenarios, local vs global data path (paper Fig 6)
   fig8      — Session placement sweep: locality vs movement cost crossover
   elastic   — static split vs ControlPlane rebalancing (makespan, moved B)
+  fairshare — 3 tenants at 6:1:1 load: FIFO vs DRF vs Capacity policies
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
@@ -19,10 +20,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
-                             "kernels", "roofline"])
+                             "fairshare", "kernels", "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import (bench_elastic, bench_kernels,
+    from benchmarks import (bench_elastic, bench_fairshare, bench_kernels,
                             bench_session_placement, fig5_overheads,
                             fig6_kmeans, roofline_table)
     sections = {
@@ -30,6 +31,7 @@ def main() -> None:
         "fig6": fig6_kmeans.run,
         "fig8": bench_session_placement.run,
         "elastic": bench_elastic.run,
+        "fairshare": bench_fairshare.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,
     }

@@ -14,9 +14,11 @@ from .control_plane import ControlPlane, RebalanceEvent  # noqa: F401
 from .dataplane import (DataPlane, Lineage, Link, PilotData,  # noqa: F401
                         PilotDataRegistry, TransferCostModel)
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401
+from .queues import (CapacityPolicy, DrfPolicy, FifoPolicy,  # noqa: F401
+                     QueueConfig, QueueTree, SchedulingPolicy, make_policy)
 from .resource_manager import ResourceManager  # noqa: F401
 from .scheduler import YarnStyleScheduler  # noqa: F401
-from .session import (Session, Stage, analytics_stage,  # noqa: F401
-                      hpc_stage)
+from .session import (Session, Stage, TenantContext,  # noqa: F401
+                      analytics_stage, hpc_stage)
 from .unit_manager import UnitManager  # noqa: F401
 from . import modes  # noqa: F401

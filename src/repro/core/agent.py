@@ -54,7 +54,9 @@ class Agent:
         self.scheduler = YarnStyleScheduler(
             self.lrm.devices, self.lrm.hbm_per_chip, pilot.data,
             reuse_app_master=reuse_app_master,
-            app_master_overhead_s=app_master_overhead_s)
+            app_master_overhead_s=app_master_overhead_s,
+            policy=getattr(pilot.desc, "scheduler_policy", "fifo"),
+            queues=getattr(pilot.desc, "queues", None))
         # sized past the slot count so an elastic grow (absorbed devices)
         # still finds idle spawner threads; executors are sleep-heavy in
         # the dry-run, so over-provisioning is cheap
@@ -87,17 +89,23 @@ class Agent:
     # -------------------------------------------------------------- submit
     def submit(self, desc: ComputeUnitDescription) -> ComputeUnit:
         cu = ComputeUnit(desc)
+        # queue routing can reject (ACL violation, unknown queue on a
+        # declared-queue pilot) — register only after it succeeds so a
+        # rejected submit does not leave a zombie CU in the table
+        self.scheduler.submit(cu)
         with self._lock:
             self._cus[cu.uid] = cu
-        self.scheduler.submit(cu)
         self._wake.set()
         return cu
 
-    def reserve_chips(self, n: int) -> List[int]:
+    def reserve_chips(self, n: int, *, tenant: Optional[str] = None,
+                      queue: Optional[str] = None) -> List[int]:
         """Take n chips out of the slot table (Mode-I analytics carve-out).
         Goes through the scheduler's public carve-out API, which also
-        moves the chips' HBM out of the admission accounting."""
-        return self.scheduler.carve_out(n, timeout=30.0)
+        moves the chips' HBM out of the admission accounting and charges
+        the chips to the (ACL-checked) tenant queue."""
+        return self.scheduler.carve_out(n, timeout=30.0,
+                                        tenant=tenant, queue=queue)
 
     def return_chips(self, idxs: Sequence[int]) -> None:
         self.scheduler.restore(idxs)
@@ -140,6 +148,8 @@ class Agent:
             "queue_len": backlog["queue_len"],
             "queued_chip_demand": backlog["queued_chip_demand"],
             "n_draining": backlog["n_draining"],
+            "guarantee_floor": backlog["guarantee_floor"],
+            "queue_backlog": backlog["queues"],
             "ema_runtimes": ema,
             "cu_states": states,
             "scheduler": dict(self.scheduler.stats),
@@ -152,23 +162,29 @@ class Agent:
 
     def _check_preemption(self) -> None:
         """Evict lower-priority running CUs for starved high-priority ones
-        (victims are canceled and re-queued)."""
+        (victims are canceled and re-queued), then let a starved
+        guaranteed queue reclaim chips from over-guarantee borrowers
+        (capacity policy only — the scheduler picks the victims)."""
         pending = self.scheduler.pending_cus()
         if not pending:
             return
-        top = max(pending, key=lambda c: c.desc.priority)
-        if top.desc.priority <= 0:
-            return
         with self._lock:
             running = dict(self._cus)
-        victims = self.scheduler.preemption_victims(top, running)
-        for uid in victims:
+        top = max(pending, key=lambda c: c.desc.priority)
+        if top.desc.priority > 0:
+            self._evict_all(self.scheduler.preemption_victims(top, running),
+                            "preempted")
+        self._evict_all(self.scheduler.reclaim_victims(running),
+                        "capacity_reclaimed")
+
+    def _evict_all(self, uids: Sequence[str], stat_key: str) -> None:
+        for uid in uids:
             victim = self._cus.get(uid)
             if victim is None or victim.done:
                 continue
             self._requeue_clone(victim)
-            self.scheduler.stats["preempted"] = \
-                self.scheduler.stats.get("preempted", 0) + 1
+            self.scheduler.stats[stat_key] = \
+                self.scheduler.stats.get(stat_key, 0) + 1
 
     def _requeue_clone(self, victim: ComputeUnit, *,
                        retries: Optional[int] = None) -> ComputeUnit:

@@ -43,6 +43,8 @@ class ComputeUnitDescription:
     max_retries: int = 0
     app_id: Optional[str] = None       # CUs sharing an app reuse the AppMaster
     needs_mesh: bool = True            # pass the assigned sub-mesh as kwarg
+    tenant: Optional[str] = None       # submitting tenant (queue ACL subject)
+    queue: Optional[str] = None        # tenant queue (default: tenant name)
 
 
 class ComputeUnit:

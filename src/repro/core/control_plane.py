@@ -89,12 +89,24 @@ class ControlPlane:
         demand = hb.get("queued_chip_demand", 0) + hb.get("busy_chips", 0)
         return demand / slots
 
+    @staticmethod
+    def queue_pressures(hb: Dict[str, Any]) -> Dict[str, float]:
+        """Per-tenant-queue pressure from one heartbeat: each queue's
+        demanded + held chips over the pilot's live slot count — the
+        (pilot, queue) grid the multi-tenant rebalancer reasons about."""
+        slots = max(hb.get("n_slots", 0), 1)
+        return {name: (qb.get("queued_chip_demand", 0)
+                       + qb.get("chips_used", 0)) / slots
+                for name, qb in hb.get("queue_backlog", {}).items()}
+
     def poll(self) -> Dict[str, Dict[str, Any]]:
-        """Fresh heartbeat + pressure per active pilot (keyed by uid)."""
+        """Fresh heartbeat + pressure per active pilot (keyed by uid),
+        with the per-queue pressure breakdown."""
         out = {}
         for p in self._active_pilots():
             hb = p.agent.heartbeat()
             out[p.uid] = {**hb, "pressure": self.pressure_of(hb),
+                          "queue_pressure": self.queue_pressures(hb),
                           "pilot": p, "name": p.desc.name}
         return out
 
@@ -153,12 +165,15 @@ class ControlPlane:
              reason: str = "rebalance") -> Optional[RebalanceEvent]:
         """Drain `n` chips from `src`, evict their shards, walk the lease
         through reclaim → grant, and have `dst` absorb the slots live."""
-        # never shrink below the largest gang the src pilot still owes:
-        # a drain-preempted gang clone bigger than the shrunken pilot
-        # would FAIL fast instead of waiting for chips that left
-        gang_floor = src.agent.scheduler.max_gang_demand()
-        if gang_floor:
-            n = min(n, max(src.agent.scheduler.n_slots - gang_floor, 0))
+        # never shrink below the largest gang the src pilot still owes
+        # (a drain-preempted gang clone bigger than the shrunken pilot
+        # would FAIL fast instead of waiting for chips that left), nor
+        # below the chips its guaranteed tenant queues are entitled to —
+        # a rebalance must not starve a queue's guaranteed share
+        floor = max(src.agent.scheduler.max_gang_demand(),
+                    src.agent.scheduler.guarantee_floor())
+        if floor:
+            n = min(n, max(src.agent.scheduler.n_slots - floor, 0))
         if n < 1:
             return None
         with self._lock:

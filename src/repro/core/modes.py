@@ -44,17 +44,22 @@ class AnalyticsCluster:
         self._shutdown = False
 
     # ----------------------------------------------------------- Mode II
-    def run_hpc(self, fn: Callable, *args, pilot=None, **kwargs) -> Any:
+    def run_hpc(self, fn: Callable, *args, pilot=None,
+                tenant: Optional[str] = None, queue: Optional[str] = None,
+                **kwargs) -> Any:
         """Gang-schedule an HPC callable on this cluster's devices.
 
         If a pilot is given, goes through its scheduler as a gang CU
         (paper: RADICAL-Pilot-Agent connecting to a running YARN
         cluster); otherwise executes directly under the cluster mesh.
+        ``tenant``/``queue`` tag the CU — required when the pilot
+        declares tenant queues (strict routing rejects untagged work).
         """
         if pilot is not None:
             cu = pilot.submit(ComputeUnitDescription(
                 fn=fn, args=args, kwargs=kwargs, n_chips=len(self.devices),
-                gang=True, tag="hpc-on-analytics"))
+                gang=True, tag="hpc-on-analytics",
+                tenant=tenant, queue=queue))
             return cu.wait(300)
         return fn(*args, mesh=self.mesh, **kwargs)
 

@@ -52,6 +52,8 @@ class PilotDescription:
     app_master_overhead_s: float = 0.0
     n_spawners: Optional[int] = None  # executor threads (None: auto-size)
     enable_speculation: bool = True
+    scheduler_policy: Any = "fifo"    # 'fifo' | 'capacity' | 'drf' | instance
+    queues: Optional[Sequence] = None  # QueueConfigs for the tenant queues
 
 
 class Pilot:
@@ -100,14 +102,17 @@ class Pilot:
         return self.agent.submit(cu_desc)
 
     # ------------------------------------------------------------ Mode I
-    def spawn_analytics_cluster(self, n_chips: int, **kw):
+    def spawn_analytics_cluster(self, n_chips: int, *,
+                                tenant: Optional[str] = None,
+                                queue: Optional[str] = None, **kw):
         """Carve an on-demand analytics cluster out of this pilot (Mode I,
         'Hadoop on HPC'). Chips come from the scheduler's public
-        ``carve_out`` API (HBM accounted) and are restored on
+        ``carve_out`` API (HBM accounted, charged to the tenant's queue
+        under its ACL/caps) and are restored on
         ``AnalyticsCluster.shutdown()``."""
         from .modes import AnalyticsCluster
         assert self.agent is not None
-        idxs = self.agent.reserve_chips(n_chips)
+        idxs = self.agent.reserve_chips(n_chips, tenant=tenant, queue=queue)
         devs = self.agent.scheduler.devices_of(idxs)
         cluster = AnalyticsCluster(devs, parent=self, reserved_idxs=idxs, **kw)
         return cluster

@@ -20,17 +20,27 @@ Mirrors the paper's description of resource management on YARN:
     :meth:`carve_out`/:meth:`restore`), marked DRAINING for a
     ControlPlane rebalance (:meth:`begin_drain`/:meth:`finish_drain` —
     no new binds, running CUs finish or are preempted), or added live
-    (:meth:`add_devices`).
+    (:meth:`add_devices`);
+  * multi-tenancy: pending CUs live in a :class:`~repro.core.queues.
+    QueueTree` of named tenant queues with guaranteed/maximum (chips,
+    HBM) shares; a pluggable :class:`~repro.core.queues.
+    SchedulingPolicy` (``fifo`` — the default, byte-for-byte the old
+    single-list order — ``capacity`` or ``drf``) arbitrates between
+    queues each round, preemption respects queue guarantees, and a
+    starved guaranteed queue reclaims borrowed chips via
+    :meth:`reclaim_victims`.
 """
 from __future__ import annotations
 
 import itertools
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from .compute_unit import ComputeUnit, CUState
 from .dataplane import DataPlane
+from .queues import (DEFAULT_QUEUE, QueueConfig, QueueTree, SchedulingPolicy,
+                     make_policy)
 
 APP_MASTER_CHIPS = 1  # phase-1 reservation size (YARN AppMaster container)
 
@@ -52,19 +62,24 @@ class YarnStyleScheduler:
                  reuse_app_master: bool = True,
                  locality_delay_rounds: int = 3,
                  app_master_overhead_s: float = 0.0,
-                 gang_reservation_rounds: int = 8):
+                 gang_reservation_rounds: int = 8,
+                 policy: Union[str, SchedulingPolicy, None] = "fifo",
+                 queues: Optional[Sequence[QueueConfig]] = None):
         self._devices = list(devices)
         self._hbm = hbm_per_chip
         self._free: Set[int] = set(range(len(self._devices)))
         self._mem_free: Dict[int, int] = {i: hbm_per_chip
                                           for i in range(len(self._devices))}
-        self._queue: List[ComputeUnit] = []
+        self.policy = make_policy(policy)
+        self.queues = QueueTree(queues, hbm_per_chip=hbm_per_chip)
+        self._cu_usage: Dict[str, Tuple[str, int, int]] = {}  # uid -> (q, chips, hbm)
         self._running: Dict[str, List[int]] = {}
         self._app_masters: Dict[str, int] = {}     # app_id -> device idx
         self._skip_counts: Dict[str, int] = {}
         # --- elastic device states (disjoint from _free) ---
         self._draining: Set[int] = set()    # no new binds; leaving the pilot
         self._carved: Set[int] = set()      # Mode-I carve-out (will return)
+        self._carved_charge: Dict[int, Tuple[str, int]] = {}  # idx -> (q, hbm)
         # --- gang reservation (aging): freed chips park for one starved gang
         self._gang_res_uid: Optional[str] = None
         self._gang_res_chips: Set[int] = set()
@@ -86,10 +101,12 @@ class YarnStyleScheduler:
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, cu: ComputeUnit) -> None:
+        """Route the CU to its tenant queue (ACL-checked).  The queue
+        keeps its pending list ordered by a stable (-priority, arrival)
+        key via ``bisect.insort`` — O(log n), not a full re-sort."""
         with self._lock:
+            self.queues.submit(cu)          # PermissionError on ACL violation
             cu._set_state(CUState.PENDING)
-            self._queue.append(cu)
-            self._queue.sort(key=lambda c: -c.desc.priority)
 
     def devices_of(self, idxs: Sequence[int]) -> List:
         return [self._devices[i] for i in idxs]
@@ -97,8 +114,8 @@ class YarnStyleScheduler:
     def pending_cus(self) -> List[ComputeUnit]:
         """Snapshot of queued CUs (PENDING/RESERVED), taken under the lock."""
         with self._lock:
-            return [c for c in self._queue
-                    if c.state in (CUState.PENDING, CUState.RESERVED)]
+            return [cu for (_, cu), _q in self.queues.pending_entries()
+                    if cu.state in (CUState.PENDING, CUState.RESERVED)]
 
     def running_assignments(self) -> Dict[str, List[int]]:
         """Snapshot of uid -> bound device indices, taken under the lock."""
@@ -160,7 +177,8 @@ class YarnStyleScheduler:
         self._skip_counts.pop(cu.uid, None)  # scheduled: drop delay state
         return best
 
-    def _admit(self, cu: ComputeUnit) -> Optional[List[int]]:
+    def _admit(self, cu: ComputeUnit,
+               queue_name: str = DEFAULT_QUEUE) -> Optional[List[int]]:
         """Two-phase admission; returns bound device indices or None."""
         app = cu.desc.app_id or cu.uid
         # phase 1: AppMaster reservation
@@ -192,6 +210,9 @@ class YarnStyleScheduler:
         self._gang_waits.pop(cu.uid, None)
         if cu.desc.gang:
             self._running_gangs[cu.uid] = cu.desc.n_chips
+        hbm_total = mem_per * cu.desc.n_chips
+        self.queues.charge(queue_name, cu.desc.n_chips, hbm_total)
+        self._cu_usage[cu.uid] = (queue_name, cu.desc.n_chips, hbm_total)
         self.stats["scheduled"] += 1
         return cand
 
@@ -232,16 +253,35 @@ class YarnStyleScheduler:
         return len(self._mem_free) - len(self._draining)
 
     def try_schedule(self) -> List[Tuple[ComputeUnit, List[int]]]:
-        """One scheduling round: returns newly-bound (cu, device idxs)."""
+        """One scheduling round: returns newly-bound (cu, device idxs).
+
+        The policy re-picks the offering queue after every candidate, so
+        usage-driven orders (capacity starvation ratio, DRF dominant
+        share) react to binds made earlier in the same round; the fifo
+        policy degenerates to the global (-priority, arrival) order."""
         out = []
         with self._lock:
             # a reservation whose holder left the queue is stale
             if (self._gang_res_uid is not None
-                    and all(c.uid != self._gang_res_uid for c in self._queue)):
+                    and not self.queues.has_pending_uid(self._gang_res_uid)):
                 self._clear_gang_reservation()
-            remaining = []
-            for cu in self._queue:
+            totals = (max(self._capacity(), 1),
+                      max(self._capacity(), 1) * self._hbm)
+            snap = {name: list(q.pending)
+                    for name, q in self.queues.queues.items() if q.pending}
+            cursors = {name: 0 for name in snap}
+            while True:
+                heads = {name: snap[name][cursors[name]][0]
+                         for name in snap if cursors[name] < len(snap[name])}
+                if not heads:
+                    break
+                qname = self.policy.pick_queue(self.queues, heads, totals)
+                entry = snap[qname][cursors[qname]]
+                cursors[qname] += 1
+                _, cu = entry
+                q = self.queues.queues[qname]
                 if cu.state is CUState.CANCELED:
+                    q.remove(entry)
                     if self._gang_res_uid == cu.uid:
                         self._clear_gang_reservation()
                     continue
@@ -250,29 +290,87 @@ class YarnStyleScheduler:
                         f"gang of {cu.desc.n_chips} > pilot size "
                         f"{self._capacity()}")
                     cu._set_state(CUState.FAILED)
+                    q.remove(entry)
                     continue
-                cand = self._admit(cu)
+                hbm_req = mem_per_chip(cu.desc.memory_bytes,
+                                       cu.desc.n_chips) * cu.desc.n_chips
+                cfg = q.config
+                if ((cfg.max_chips is not None
+                     and cu.desc.n_chips > cfg.max_chips)
+                        or (cfg.max_hbm is not None
+                            and hbm_req > cfg.max_hbm)):
+                    # could never fit even with the queue idle: fail fast
+                    # like the gang-too-big case instead of pending forever
+                    cu.error = RuntimeError(
+                        f"CU wants {cu.desc.n_chips} chips / {hbm_req} HBM "
+                        f"> queue {qname!r} max share "
+                        f"({cfg.max_chips} chips / {cfg.max_hbm} HBM)")
+                    cu._set_state(CUState.FAILED)
+                    q.remove(entry)
+                    continue
+                # a CU over its queue's max share stays queued; a capped
+                # gang does not age a reservation either — parked chips
+                # could never be offered to it anyway
+                if not self.policy.may_admit(self.queues, q, cu, hbm_req):
+                    continue
+                cand = self._admit(cu, qname)
                 if cand is None:
                     if cu.desc.gang:
                         self._note_gang_wait(cu)
-                    remaining.append(cu)
                 else:
+                    q.remove(entry)
                     out.append((cu, cand))
-            self._queue = remaining
         return out
 
     # ----------------------------------------------------------- preemption
+    def _preempt_gain(self, idxs: Sequence[int]) -> int:
+        """Bindable chips actually recovered by evicting a CU: chips on
+        DRAINING, carved-out or removed slots never return to the free
+        pool, so a CU running there is worthless as a preemption target."""
+        blocked = self._draining | self._carved
+        return sum(1 for i in idxs
+                   if i in self._mem_free and i not in blocked)
+
     def preemption_victims(self, cu: ComputeUnit,
                            running: Dict[str, ComputeUnit]) -> List[str]:
         """YARN-style preemption: a high-priority pending CU may evict
         enough strictly-lower-priority running CUs to free its slots.
         Returns victim uids (lowest priority first) or [] if impossible.
         The paper notes YARN 'can preempt containers in high-load
-        situations' — the agent re-queues victims (bounded by retries)."""
+        situations' — the agent re-queues victims (bounded by retries).
+
+        Policy-aware: victims on DRAINING devices are never chosen
+        (evicting them frees nothing bindable), and under the capacity
+        policy a victim is skipped when evicting it would drop its
+        queue's chip usage below the queue's guaranteed share — unless
+        preemptor and victim share a queue (intra-queue priority
+        preemption keeps the queue's usage)."""
         with self._lock:
             need = cu.desc.n_chips - len(self._free)
-            if need <= 0:
+            my_queue = cu.desc.queue or cu.desc.tenant or DEFAULT_QUEUE
+            my_q = self.queues.get(my_queue)
+            hbm_req = mem_per_chip(cu.desc.memory_bytes,
+                                   cu.desc.n_chips) * cu.desc.n_chips
+            # when the preemptor's own queue sits at its max share, only
+            # same-queue victims help: evicting other queues frees chips
+            # the cap still refuses, which is churn, not progress.  The
+            # headroom the victims must free comes on top of `need` —
+            # and matters even with chips free (need <= 0), where the
+            # only thing blocking the preemptor is its own queue's cap.
+            chips_head = hbm_head = 0
+            if my_q is not None:
+                cfg = my_q.config
+                if cfg.max_chips is not None:
+                    chips_head = max(my_q.chips_used + cu.desc.n_chips
+                                     - cfg.max_chips, 0)
+                if cfg.max_hbm is not None:
+                    hbm_head = max(my_q.hbm_used + hbm_req - cfg.max_hbm, 0)
+            cap_blocked = chips_head > 0 or hbm_head > 0
+            if need <= 0 and not cap_blocked:
                 return []
+            need = max(need, 0)
+            usage = {name: q.chips_used
+                     for name, q in self.queues.queues.items()}
             candidates = sorted(
                 ((v, self._running.get(v.uid, [])) for v in running.values()
                  if v.state is CUState.RUNNING
@@ -281,11 +379,73 @@ class YarnStyleScheduler:
                 key=lambda pair: pair[0].desc.priority)
             victims, freed = [], 0
             for v, idxs in candidates:
+                gain = self._preempt_gain(idxs)
+                if gain == 0:
+                    continue
+                vq, vchips, vhbm = self._cu_usage.get(
+                    v.uid, (DEFAULT_QUEUE, len(idxs), 0))
+                if cap_blocked and vq != my_queue:
+                    continue
+                floor = self.policy.victim_floor(self.queues, vq)
+                if vq != my_queue and usage.get(vq, 0) - vchips < floor:
+                    continue
                 victims.append(v.uid)
-                freed += len(idxs)
-                if freed >= need:
+                usage[vq] = usage.get(vq, 0) - vchips
+                freed += gain
+                if vq == my_queue:
+                    chips_head -= vchips
+                    hbm_head -= vhbm
+                if freed >= need and chips_head <= 0 and hbm_head <= 0:
                     return victims
             return []
+
+    def reclaim_victims(self, running: Dict[str, ComputeUnit]) -> List[str]:
+        """Capacity-policy reclaim-via-preemption (YARN's proportional
+        capacity preemption): when a guaranteed queue has pending demand
+        but sits below its guaranteed chips, evict enough non-gang CUs
+        from queues borrowing above *their* guarantees to restore the
+        floor.  Victims' queues are never dropped below their own
+        guarantees; lowest priority evicts first.  Empty under policies
+        that do not reclaim (fifo, drf)."""
+        with self._lock:
+            if not self.policy.reclaims():
+                return []
+            deficit, starved = 0, set()
+            for q in self.queues.all():
+                g = self.queues.guaranteed_chips_of(q)
+                if g <= 0:
+                    continue
+                want = min(g - q.chips_used, q.queued_chip_demand())
+                if want > 0:
+                    starved.add(q.name)
+                    deficit += want
+            deficit -= len(self._free)   # free chips satisfy demand first
+            if deficit <= 0 or not starved:
+                return []
+            usage = {name: q.chips_used
+                     for name, q in self.queues.queues.items()}
+            cands = []
+            for v in running.values():
+                if v.state is not CUState.RUNNING or v.desc.gang:
+                    continue
+                info = self._cu_usage.get(v.uid)
+                if info is None or info[0] in starved:
+                    continue
+                gain = self._preempt_gain(self._running.get(v.uid, []))
+                if gain:
+                    cands.append((v.desc.priority, v.uid, info, gain))
+            cands.sort(key=lambda t: (t[0], t[1]))
+            victims, freed = [], 0
+            for _, uid, (vq, vchips, _vh), gain in cands:
+                floor = self.queues.guaranteed_chips_of(self.queues.queues[vq])
+                if usage.get(vq, 0) - vchips < floor:
+                    continue
+                victims.append(uid)
+                usage[vq] -= vchips
+                freed += gain
+                if freed >= deficit:
+                    break
+            return victims
 
     def release(self, cu: ComputeUnit, *, gen: Optional[int] = None) -> None:
         """Return a CU's slots. Idempotent: a second release of the same
@@ -298,6 +458,9 @@ class YarnStyleScheduler:
             idxs = self._running.pop(cu.uid, None)
             self._bound_gen.pop(cu.uid, None)
             self._running_gangs.pop(cu.uid, None)
+            usage = self._cu_usage.pop(cu.uid, None)
+            if usage is not None:
+                self.queues.uncharge(*usage)
             if not idxs:
                 return
             mem_per = mem_per_chip(cu.desc.memory_bytes, cu.desc.n_chips)
@@ -312,19 +475,42 @@ class YarnStyleScheduler:
                 self._app_masters.pop(cu.desc.app_id or cu.uid, None)
 
     # ------------------------------------------------------------ carve-out
-    def carve_out(self, n: int, timeout: float = 30.0) -> List[int]:
+    def carve_out(self, n: int, timeout: float = 30.0, *,
+                  tenant: Optional[str] = None,
+                  queue: Optional[str] = None) -> List[int]:
         """Take n free chips (with their full HBM) out of the slot table —
         the Mode-I analytics carve-out. Blocks until n chips are free or
-        the timeout expires. Returns the carved indices."""
+        the timeout expires. Returns the carved indices.
+
+        Carves go through the same queue admission as CUs: the target
+        queue's ACL and max share apply, and the carved chips are
+        charged to the queue until :meth:`restore` — a tenant cannot
+        side-step its caps by carving instead of submitting."""
         deadline = time.monotonic() + timeout
         while True:
             with self._lock:
+                q = self.queues.admission_queue(queue, tenant)
+                cfg = q.config
+                if (cfg.max_chips is not None
+                        and q.chips_used + n > cfg.max_chips):
+                    raise RuntimeError(
+                        f"carve of {n} chips would put queue {q.name!r} "
+                        f"over its max share ({q.chips_used} used, "
+                        f"max {cfg.max_chips})")
+                if (cfg.max_hbm is not None
+                        and q.hbm_used + n * self._hbm > cfg.max_hbm):
+                    raise RuntimeError(
+                        f"carve of {n} chips ({n * self._hbm} HBM) would "
+                        f"put queue {q.name!r} over its max HBM share "
+                        f"({q.hbm_used} used, max {cfg.max_hbm})")
                 avail = sorted(self._free)
                 if len(avail) >= n:
                     take = avail[:n]
                     for i in take:
                         self._free.discard(i)
                         self._carved.add(i)
+                        self._carved_charge[i] = (q.name, self._mem_free[i])
+                        self.queues.charge(q.name, 1, self._mem_free[i])
                         self._mem_free[i] = 0   # the chip's HBM goes with it
                     self.stats["carved_out"] += n
                     return take
@@ -341,6 +527,8 @@ class YarnStyleScheduler:
                     continue
                 self._carved.discard(i)
                 self._mem_free[i] = self._hbm
+                qname, hbm = self._carved_charge.pop(i, (DEFAULT_QUEUE, 0))
+                self.queues.uncharge(qname, 1, hbm)
                 self._offer_freed_chip(i)
 
     # -------------------------------------------------------------- drain
@@ -387,10 +575,18 @@ class YarnStyleScheduler:
         turn a viable gang into a permanent 'too big for the pilot'
         failure (chips lost to a drain do not come back on their own)."""
         with self._lock:
-            demands = [c.desc.n_chips for c in self._queue
-                       if c.desc.gang and not c.done]
+            demands = [cu.desc.n_chips
+                       for (_, cu), _q in self.queues.pending_entries()
+                       if cu.desc.gang and not cu.done]
             demands.extend(self._running_gangs.values())
             return max(demands, default=0)
+
+    def guarantee_floor(self) -> int:
+        """Chips this pilot must keep to honor demand-backed queue
+        guarantees — the ControlPlane never drains below this, so a
+        rebalance cannot take chips a guaranteed queue is entitled to."""
+        with self._lock:
+            return self.queues.guarantee_floor()
 
     def pick_drain_candidates(self, n: int) -> List[int]:
         """Choose up to n chips to drain: idle chips first, then the
@@ -416,6 +612,9 @@ class YarnStyleScheduler:
                 self._free.discard(i)
                 self._draining.discard(i)
                 self._carved.discard(i)
+                if i in self._carved_charge:
+                    qname, hbm = self._carved_charge.pop(i)
+                    self.queues.uncharge(qname, 1, hbm)
                 self._gang_res_chips.discard(i)
                 self._mem_free.pop(i, None)
             for uid, assigned in list(self._running.items()):
@@ -442,10 +641,13 @@ class YarnStyleScheduler:
         with self._lock:
             return self._capacity()
 
-    def backlog(self) -> Dict[str, int]:
-        """Pressure inputs for the ControlPlane's heartbeat poll."""
+    def backlog(self) -> Dict[str, Any]:
+        """Pressure inputs for the ControlPlane's heartbeat poll, with a
+        per-tenant-queue breakdown under ``"queues"`` so the control
+        plane can reason about (pilot, queue) pressure and guarantees."""
         with self._lock:
-            queued = [c for c in self._queue if not c.done]
+            queued = [cu for (_, cu), _q in self.queues.pending_entries()
+                      if not cu.done]
             busy = sum(len(v) for v in self._running.values())
             return {
                 "queue_len": len(queued),
@@ -456,4 +658,6 @@ class YarnStyleScheduler:
                 "n_running": len(self._running),
                 "n_draining": len(self._draining),
                 "n_carved": len(self._carved),
+                "guarantee_floor": self.queues.guarantee_floor(),
+                "queues": self.queues.snapshot(),
             }

@@ -70,6 +70,8 @@ class Stage:
     n_chips: Optional[int] = None       # default: the whole pilot
     pilot: Optional[str] = None         # pin to a pilot by name (optional)
     gang: bool = True
+    tenant: Optional[str] = None        # submitting tenant (set by contexts)
+    queue: Optional[str] = None         # tenant queue for the stage's CUs
 
 
 def hpc_stage(name: str, fn: Callable, **kw) -> Stage:
@@ -81,6 +83,44 @@ def analytics_stage(name: str, fn: Callable, **kw) -> Stage:
     """A MapReduce-like stage: runs natively on an analytics-runtime
     pilot, or via a Mode-I carve-out inside an HPC pilot."""
     return Stage(name=name, fn=fn, kind=ANALYTICS, **kw)
+
+
+class TenantContext:
+    """One tenant's view of a Session: stages submitted through it are
+    tagged with the tenant's name and queue (so every CU lands in the
+    tenant's queue on whichever pilot the placer picks), and an optional
+    ``max_concurrent_stages`` budget gates admission — the Session-level
+    analogue of YARN's per-user limits.  Obtain via
+    :meth:`Session.tenant`."""
+
+    def __init__(self, session: "Session", name: str, *,
+                 queue: Optional[str] = None,
+                 max_concurrent_stages: Optional[int] = None):
+        if max_concurrent_stages is not None and max_concurrent_stages < 1:
+            raise ValueError("max_concurrent_stages must be >= 1")
+        self.session = session
+        self.name = name
+        self.queue = queue or name
+        self.max_concurrent_stages = max_concurrent_stages
+        self._sem = (threading.BoundedSemaphore(max_concurrent_stages)
+                     if max_concurrent_stages else None)
+        self.stats = {"submitted": 0, "completed": 0}
+
+    def tag(self, stages: Sequence[Stage]) -> List[Stage]:
+        """Stages re-bound to this tenant (name + queue)."""
+        return [dataclasses.replace(s, tenant=self.name,
+                                    queue=s.queue or self.queue)
+                for s in stages]
+
+    def submit_dag(self, stages: Sequence[Stage], **kw) -> Dict[str, Future]:
+        tagged = self.tag(stages)
+        self.stats["submitted"] += len(tagged)
+        return self.session.submit_dag(tagged, **kw)
+
+    def run(self, stages: Sequence[Stage], **kw) -> Dict[str, Any]:
+        tagged = self.tag(stages)
+        self.stats["submitted"] += len(tagged)
+        return self.session.run(tagged, **kw)
 
 
 class Session:
@@ -95,8 +135,33 @@ class Session:
         self.placements: Dict[str, Dict[str, Any]] = {}
         self._stages: Dict[str, Stage] = {}         # for rematerialization
         self._engines: Dict[str, Any] = {}          # pilot uid -> engine
+        self._tenants: Dict[str, TenantContext] = {}
         self._lock = threading.Lock()
         self._move_lock = threading.Lock()          # serializes input moves
+
+    # ------------------------------------------------------------- tenants
+    def tenant(self, name: str, *, queue: Optional[str] = None,
+               max_concurrent_stages: Optional[int] = None) -> TenantContext:
+        """Register (or fetch) a tenant context.  Stages submitted
+        through it carry the tenant's name/queue down to every CU, and
+        at most ``max_concurrent_stages`` of its stages run at once."""
+        with self._lock:
+            ctx = self._tenants.get(name)
+            if ctx is None:
+                ctx = TenantContext(
+                    self, name, queue=queue,
+                    max_concurrent_stages=max_concurrent_stages)
+                self._tenants[name] = ctx
+            elif ((queue is not None and queue != ctx.queue)
+                  or (max_concurrent_stages is not None
+                      and max_concurrent_stages
+                      != ctx.max_concurrent_stages)):
+                raise ValueError(
+                    f"tenant {name!r} already registered with queue="
+                    f"{ctx.queue!r}, max_concurrent_stages="
+                    f"{ctx.max_concurrent_stages} — re-registration with "
+                    "different settings would silently not apply")
+            return ctx
 
     # -------------------------------------------------------------- pilots
     def add_pilot(self, desc: PilotDescription) -> Pilot:
@@ -246,12 +311,30 @@ class Session:
                    timeout: float) -> Any:
         for f in dep_futs:                     # propagate producer failures
             f.result(timeout)
-        pilot, decision = self.place(stage)
-        self._ensure_inputs_on(stage, pilot, decision)
-        if stage.kind == HPC:
-            result = self._run_hpc(stage, pilot, timeout)
-        else:
-            result = self._run_analytics(stage, pilot, decision, timeout)
+        ctx = self._tenants.get(stage.tenant) if stage.tenant else None
+        if ctx is not None and ctx._sem is not None:
+            # per-tenant admission: at most max_concurrent_stages in
+            # flight; excess stages wait here, not in a pilot's queue
+            if not ctx._sem.acquire(timeout=timeout):
+                raise TimeoutError(
+                    f"tenant {stage.tenant!r} admission budget "
+                    f"({ctx.max_concurrent_stages}) not freed within "
+                    f"{timeout}s for stage {stage.name!r}")
+        try:
+            pilot, decision = self.place(stage)
+            if stage.tenant:
+                decision["tenant"] = stage.tenant
+                decision["queue"] = stage.queue
+            self._ensure_inputs_on(stage, pilot, decision)
+            if stage.kind == HPC:
+                result = self._run_hpc(stage, pilot, timeout)
+            else:
+                result = self._run_analytics(stage, pilot, decision, timeout)
+        finally:
+            if ctx is not None and ctx._sem is not None:
+                ctx._sem.release()
+        if ctx is not None:
+            ctx.stats["completed"] += 1
         self._store_outputs(stage, pilot, result)
         with self._lock:
             self.results[stage.name] = result
@@ -291,6 +374,13 @@ class Session:
                 kwargs["results"] = dict(self.results)
         return kwargs
 
+    @staticmethod
+    def _app_id(stage: Stage) -> str:
+        """AppMaster-sharing key: stages of one kind share an app, but
+        never across tenants (reuse must not leak between tenants)."""
+        return (f"session:{stage.kind}"
+                + (f":{stage.tenant}" if stage.tenant else ""))
+
     def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float) -> Any:
         # whole-pilot stages size to the scheduler's LIVE slot count, not
         # len(devices): chips draining away are still in the device list
@@ -302,7 +392,8 @@ class Session:
 
         cu = pilot.submit(ComputeUnitDescription(
             fn=job, gang=stage.gang, n_chips=n, tag=f"stage:{stage.name}",
-            data=tuple(stage.inputs), app_id=f"session:{stage.kind}"))
+            data=tuple(stage.inputs), app_id=self._app_id(stage),
+            tenant=stage.tenant, queue=stage.queue))
         # follow(): a ControlPlane drain may preempt the CU and forward
         # to a re-queued clone — the stage result is the chain's end
         return cu.follow(timeout)
@@ -321,13 +412,15 @@ class Session:
                 n_chips=stage.n_chips
                 or max(pilot.agent.scheduler.n_slots, 1),
                 tag=f"stage:{stage.name}", data=tuple(stage.inputs),
-                needs_mesh=False, app_id="session:analytics"))
+                needs_mesh=False, app_id=self._app_id(stage),
+                tenant=stage.tenant, queue=stage.queue))
             return cu.follow(timeout)
         # Mode I: carve an on-demand analytics cluster out of the HPC
         # pilot holding the data (compute goes to the data).
         decision["mode"] = "mode1-carve"
         n = stage.n_chips or len(pilot.devices)
-        cluster = pilot.spawn_analytics_cluster(n)
+        cluster = pilot.spawn_analytics_cluster(n, tenant=stage.tenant,
+                                                queue=stage.queue)
         decision["mode1_spawn_s"] = cluster.startup_s
         try:
             return stage.fn(

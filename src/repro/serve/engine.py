@@ -29,9 +29,9 @@ from repro.models.config import ModelConfig
 from repro.serve.step import make_decode_step
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
+@dataclasses.dataclass(eq=False)      # identity eq: the auto __eq__ would
+class Request:                        # compare ndarray fields (ambiguous
+    uid: int                          # truth value in _waiting.remove)
     tokens: np.ndarray            # prompt token ids (1-D)
     max_new: int = 16
     done: bool = False
@@ -39,11 +39,20 @@ class Request:
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    tenant: str = "default"       # admission-budget key (multi-tenant serving)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_seq: int = 256, prompt_bucket: int = 32):
+                 max_seq: int = 256, prompt_bucket: int = 32,
+                 tenant_budget: Optional[Dict[str, int]] = None,
+                 default_tenant_budget: Optional[int] = None):
+        """``tenant_budget`` caps the decode slots one tenant may hold
+        at once (per-tenant override; ``default_tenant_budget`` for
+        everyone else).  A tenant at budget is skipped at admission —
+        later requests from other tenants join ahead of it — so one
+        tenant's flood cannot monopolize the batch.  With no budget the
+        engine admits strictly FIFO, exactly the pre-tenant behavior."""
         assert cfg.frontend == "none" and not cfg.is_encoder_decoder, \
             "continuous batching engine supports plain LM archs"
         self.cfg = cfg
@@ -51,7 +60,10 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.bucket = prompt_bucket
+        self.tenant_budget = tenant_budget
+        self.default_tenant_budget = default_tenant_budget
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._waiting: List[Request] = []   # arrival-ordered admission line
         self._decode = jax.jit(make_decode_step(cfg, sample=True),
                                donate_argnums=(1,))
         self._prefill = jax.jit(
@@ -66,17 +78,49 @@ class ServeEngine:
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
+        budget = self._budget_of(req.tenant)
+        if budget is not None and budget <= 0:
+            # a zero budget means blocked, not "one slot anyway"; reject
+            # at intake so the request cannot wedge run_until_drained
+            raise PermissionError(
+                f"tenant {req.tenant!r} has a zero slot budget")
         req.t_submit = time.monotonic()
         self.queue.put(req)
 
+    def _budget_of(self, tenant: str) -> Optional[int]:
+        if self.tenant_budget is not None and tenant in self.tenant_budget:
+            return self.tenant_budget[tenant]
+        return self.default_tenant_budget
+
+    def _tenant_active(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.active:
+            if r is not None:
+                counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        return counts
+
+    def _next_admissible(self) -> Optional[Request]:
+        """Earliest waiting request whose tenant is under budget."""
+        counts = self._tenant_active()
+        for req in self._waiting:
+            budget = self._budget_of(req.tenant)
+            if budget is None or counts.get(req.tenant, 0) < budget:
+                return req
+        return None
+
     def _admit(self) -> None:
+        while True:                  # drain intake, keeping arrival order
+            try:
+                self._waiting.append(self.queue.get_nowait())
+            except queue.Empty:
+                break
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
-            try:
-                req = self.queue.get_nowait()
-            except queue.Empty:
+            req = self._next_admissible()
+            if req is None:
                 return
+            self._waiting.remove(req)
             self._prefill_into_slot(slot, req)
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
@@ -133,7 +177,7 @@ class ServeEngine:
         while time.monotonic() - t0 < timeout_s:
             self._admit()
             if not any(a is not None for a in self.active):
-                if self.queue.empty():
+                if self.queue.empty() and not self._waiting:
                     return self.steps
                 continue
             self._step()

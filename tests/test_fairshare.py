@@ -1,0 +1,548 @@
+"""Multi-tenant hierarchical scheduling: FIFO/Capacity/DRF policies,
+queue guarantees under preemption and rebalancing, tenant contexts, and
+the serve engine's tenant budget."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.core import (ComputeUnitDescription, CUState, PilotDescription,
+                        PilotManager, QueueConfig, ResourceManager, Session,
+                        hpc_stage)
+from repro.core.compute_unit import ComputeUnit
+from repro.core.queues import DrfPolicy, QueueTree, make_policy
+from repro.core.scheduler import YarnStyleScheduler
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.i = i
+        self.platform = "fake"
+
+
+def make_sched(n=4, hbm=16, **kw):
+    kw.setdefault("locality_delay_rounds", 0)
+    return YarnStyleScheduler([FakeDevice(i) for i in range(n)], hbm, **kw)
+
+
+def cu_of(n_chips=1, *, gang=False, memory_bytes=0, priority=0,
+          tenant=None, queue=None):
+    return ComputeUnit(ComputeUnitDescription(
+        fn=lambda: None, n_chips=n_chips, gang=gang,
+        memory_bytes=memory_bytes, priority=priority,
+        tenant=tenant, queue=queue))
+
+
+def drain_order(sched, total, rounds=200):
+    """Run rounds to completion, recording each CU as it binds."""
+    order = []
+    for _ in range(rounds):
+        for cu, _idxs in sched.try_schedule():
+            order.append(cu)
+            cu._set_state(CUState.DONE)
+            sched.release(cu)
+        if len(order) >= total:
+            break
+    return order
+
+
+# ------------------------------------------------------- FIFO (the default)
+def test_fifo_default_keeps_priority_then_arrival_order():
+    """policy='fifo' (the default) reproduces the old single sorted
+    list: strictly by priority, FIFO within a priority level — the
+    bisect.insort key is (-priority, arrival seq)."""
+    sched = make_sched(1)
+    cus = [cu_of(priority=p) for p in (0, 5, 2, 5, 2, 0)]
+    for c in cus:
+        sched.submit(c)
+    order = drain_order(sched, len(cus))
+    assert order == [cus[1], cus[3], cus[2], cus[4], cus[0], cus[5]]
+
+
+def test_fifo_ignores_queue_boundaries():
+    """Under fifo, tenant queues exist (usage is tracked) but arbitration
+    is the global arrival order — multi-queue submission must not
+    reorder anything."""
+    sched = make_sched(1, queues=[QueueConfig("a"), QueueConfig("b")])
+    cus = [cu_of(queue="a"), cu_of(queue="b"), cu_of(queue="a")]
+    for c in cus:
+        sched.submit(c)
+    assert drain_order(sched, 3) == cus
+
+
+# -------------------------------------------------------------------- DRF
+def test_drf_dominant_share_convergence_three_tenants():
+    """Acceptance: 3 tenants at 6:1:1 offered load converge to equal
+    dominant shares (within 10% of the 1/3 fair share) while all have
+    demand."""
+    sched = make_sched(12, policy="drf",
+                       queues=[QueueConfig("a"), QueueConfig("b"),
+                               QueueConfig("c")])
+    for q, n in (("a", 24), ("b", 4), ("c", 4)):
+        for _ in range(n):
+            sched.submit(cu_of(queue=q))
+    bound = sched.try_schedule()
+    assert len(bound) == 12
+    shares = {q: sched.queues.get(q).chips_used / 12 for q in "abc"}
+    for q, share in shares.items():
+        assert abs(share - 1 / 3) <= 0.1 * (1 / 3) + 1e-9, shares
+    # the small tenants drained: the heavy one absorbs the freed chips
+    for cu, _ in bound:
+        if cu.desc.queue != "a":
+            cu._set_state(CUState.DONE)
+            sched.release(cu)
+    sched.try_schedule()
+    assert sched.queues.get("a").chips_used == 12
+
+
+def test_drf_weights_scale_fair_share():
+    sched = make_sched(8, policy="drf",
+                       queues=[QueueConfig("a", weight=2.0),
+                               QueueConfig("b"), QueueConfig("c")])
+    for q in ("a", "b", "c"):
+        for _ in range(8):
+            sched.submit(cu_of(queue=q))
+    sched.try_schedule()
+    used = {q: sched.queues.get(q).chips_used for q in "abc"}
+    assert used == {"a": 4, "b": 2, "c": 2}
+
+
+def test_drf_dominant_share_uses_both_dimensions():
+    tree = QueueTree([QueueConfig("m"), QueueConfig("c")])
+    tree.charge("m", 1, 160)     # HBM-heavy: 1 chip but 160 of 192 bytes
+    tree.charge("c", 2, 0)       # chip-heavy
+    totals = (12, 192)
+    assert DrfPolicy.dominant_share(tree.get("m"), totals) == 160 / 192
+    assert DrfPolicy.dominant_share(tree.get("c"), totals) == 2 / 12
+
+
+# --------------------------------------------------------------- capacity
+def test_capacity_starved_guaranteed_queue_schedules_first():
+    """With free chips scarce, the queue furthest below its guarantee
+    picks first even if its CUs arrived last."""
+    sched = make_sched(2, policy="capacity",
+                       queues=[QueueConfig("prod", guaranteed_chips=1),
+                               QueueConfig("batch")])
+    batch = [cu_of(queue="batch") for _ in range(3)]
+    for c in batch:
+        sched.submit(c)
+    prod = cu_of(queue="prod")
+    sched.submit(prod)
+    bound = {cu for cu, _ in sched.try_schedule()}
+    assert prod in bound                   # arrived last, scheduled first
+    assert len(bound) == 2
+
+
+def test_capacity_elastic_borrowing_up_to_max():
+    """A queue may exceed its guarantee when others are idle, but never
+    its max share."""
+    sched = make_sched(4, policy="capacity",
+                       queues=[QueueConfig("prod", guaranteed_chips=2),
+                               QueueConfig("batch", max_chips=3)])
+    for _ in range(6):
+        sched.submit(cu_of(queue="batch"))
+    sched.try_schedule()
+    assert sched.queues.get("batch").chips_used == 3   # borrowed past 0,
+    assert sched.n_free == 1                           # capped at max_chips
+
+
+def test_capacity_reclaim_victims_restore_guarantee():
+    """Scheduler-level reclaim: a starved guaranteed queue picks enough
+    over-guarantee victims (lowest priority first), never dropping the
+    victims' own queues below their guarantees."""
+    sched = make_sched(4, policy="capacity",
+                       queues=[QueueConfig("prod", guaranteed_chips=2),
+                               QueueConfig("batch", guaranteed_chips=1)])
+    batch = [cu_of(queue="batch", priority=p) for p in (3, 0, 1, 2)]
+    for c in batch:
+        sched.submit(c)
+    for cu, _ in sched.try_schedule():
+        cu._set_state(CUState.RUNNING)
+    for _ in range(2):
+        sched.submit(cu_of(queue="prod"))
+    victims = sched.reclaim_victims({c.uid: c for c in batch})
+    assert len(victims) == 2
+    # lowest-priority batch CUs go first; batch keeps its own guarantee
+    assert victims == [batch[1].uid, batch[2].uid]
+    # fifo/drf never reclaim
+    assert make_policy("fifo").reclaims() is False
+    assert make_policy("drf").reclaims() is False
+
+
+def test_capacity_reclaim_through_agent_preemption():
+    """Acceptance: capacity-mode reclaim of a starved guaranteed queue
+    via preemption, end to end through the Agent."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(
+            n_chips=4, enable_speculation=False,
+            scheduler_policy="capacity",
+            queues=[QueueConfig("prod", guaranteed_chips=2),
+                    QueueConfig("batch")]))
+        batch = [pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(0.8) or "b", n_chips=1,
+            queue="batch", tag="batch", needs_mesh=False))
+            for _ in range(4)]
+        time.sleep(0.1)                       # batch occupies all 4 chips
+        t0 = time.monotonic()
+        prod = [pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: "p", n_chips=1, queue="prod", tag="prod",
+            needs_mesh=False)) for _ in range(2)]
+        assert [cu.follow(10.0) for cu in prod] == ["p", "p"]
+        # reclaim preempted borrowers instead of waiting the 0.8s out
+        assert time.monotonic() - t0 < 0.7
+        assert pilot.agent.scheduler.stats.get("capacity_reclaimed", 0) >= 1
+        assert all(cu.follow(10.0) == "b" for cu in batch)  # clones finish
+    finally:
+        pm.shutdown()
+
+
+# --------------------------------------- preemption honors queues + drains
+def test_preemption_victims_respect_queue_guarantees():
+    """Satellite: under the capacity policy a victim whose eviction
+    would drop its queue below the guaranteed share is never picked."""
+    sched = make_sched(4, policy="capacity",
+                       queues=[QueueConfig("prod", guaranteed_chips=2),
+                               QueueConfig("batch"), QueueConfig("vip")])
+    prod = [cu_of(queue="prod") for _ in range(2)]
+    batch = [cu_of(queue="batch") for _ in range(2)]
+    for c in prod + batch:
+        sched.submit(c)
+    for cu, _ in sched.try_schedule():
+        cu._set_state(CUState.RUNNING)
+    running = {c.uid: c for c in prod + batch}
+    vip = cu_of(2, priority=9, queue="vip")
+    sched.submit(vip)
+    victims = sched.preemption_victims(vip, running)
+    # prod sits exactly at its guarantee: only batch CUs are eligible
+    assert set(victims) == {c.uid for c in batch}
+
+
+def test_draining_device_never_chosen_as_preemption_target():
+    """Satellite: evicting a CU whose chips are DRAINING frees nothing
+    bindable, so it must never be selected as a victim."""
+    sched = make_sched(2)
+    a, b = cu_of(), cu_of()
+    sched.submit(a)
+    sched.submit(b)
+    assignments = {}
+    for cu, idxs in sched.try_schedule():
+        cu._set_state(CUState.RUNNING)
+        assignments[cu.uid] = idxs
+    on_drain = a if assignments[a.uid] == [0] else b
+    survivor = b if on_drain is a else a
+    sched.begin_drain([0])
+    vip = cu_of(1, priority=9)
+    sched.submit(vip)
+    victims = sched.preemption_victims(vip, {a.uid: a, b.uid: b})
+    assert victims == [survivor.uid]
+    assert on_drain.uid not in victims
+
+
+# ------------------------------------------------- ControlPlane guarantees
+def test_controlplane_move_respects_queue_guarantee_floor():
+    """Acceptance: a rebalance never drops a queue below its guaranteed
+    share — the move is capped at the demand-backed guarantee floor."""
+    rm = ResourceManager(devices=jax.devices() * 8)
+    pm = PilotManager(rm, drain_preempt_after_s=0.0)
+    try:
+        src = pm.submit(PilotDescription(
+            n_chips=4, name="src", enable_speculation=False,
+            scheduler_policy="capacity",
+            queues=[QueueConfig("prod", guaranteed_chips=3)]))
+        dst = pm.submit(PilotDescription(n_chips=4, name="dst",
+                                         enable_speculation=False))
+        cus = [src.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: time.sleep(0.25) or 1, n_chips=1,
+            queue="prod", tag="prod", needs_mesh=False)) for _ in range(8)]
+        time.sleep(0.05)                      # guarantee is demand-backed
+        assert src.agent.scheduler.guarantee_floor() == 3
+        ev = pm.control_plane.move(src, dst, 4, reason="test")
+        # only 1 of the requested 4 chips may leave: 4 - floor(3)
+        assert ev is not None and ev.n_chips == 1
+        assert src.agent.scheduler.n_slots >= 3
+        # at the floor, a second move is refused outright (demand-backed)
+        assert pm.control_plane.move(src, dst, 4, reason="test") is None
+        assert src.agent.scheduler.n_slots == 3
+        assert sum(cu.follow(30.0) for cu in cus) == 8
+    finally:
+        pm.shutdown()
+
+
+def test_idle_guarantee_does_not_pin_chips():
+    sched = make_sched(4, policy="capacity",
+                       queues=[QueueConfig("prod", guaranteed_chips=3)])
+    assert sched.guarantee_floor() == 0      # no demand: nothing pinned
+    sched.submit(cu_of(queue="prod"))
+    assert sched.guarantee_floor() == 1      # demand-backed only
+
+
+# ----------------------------------------------------- heartbeats and ACLs
+def test_heartbeat_reports_per_queue_backlog():
+    pm = PilotManager(ResourceManager(devices=jax.devices() * 2))
+    try:
+        pilot = pm.submit(PilotDescription(
+            n_chips=2, scheduler_policy="capacity",
+            queues=[QueueConfig("prod", guaranteed_chips=1)]))
+        pilot.submit(ComputeUnitDescription(
+            fn=lambda mesh=None: 1, queue="prod", needs_mesh=False,
+            tag="q")).wait(30)
+        hb = pilot.agent.heartbeat()
+        assert "queue_backlog" in hb and "prod" in hb["queue_backlog"]
+        assert hb["queue_backlog"]["prod"]["guaranteed_chips"] == 1
+        assert "guarantee_floor" in hb
+        qp = pm.control_plane.queue_pressures(hb)
+        assert set(qp) == set(hb["queue_backlog"])
+    finally:
+        pm.shutdown()
+
+
+def test_declared_queues_reject_unknown_names():
+    """With queues explicitly declared, submitting to an undefined name
+    — or untagged, which would land in the uncapped implicit default —
+    is refused: neither path may escape the declared caps/ACLs.  With
+    no declared queues, names still auto-create (zero-config)."""
+    sched = make_sched(2, queues=[QueueConfig("prod", max_chips=1)])
+    with pytest.raises(ValueError, match="unknown queue"):
+        sched.submit(cu_of(queue="prod2"))
+    with pytest.raises(ValueError, match="untagged"):
+        sched.submit(cu_of())
+    # declaring 'default' re-opens untagged work, under operator caps
+    capped = make_sched(2, queues=[QueueConfig("prod"),
+                                   QueueConfig("default", max_chips=1)])
+    capped.submit(cu_of())
+    zero_conf = make_sched(2)
+    zero_conf.submit(cu_of(queue="anything"))   # auto-created
+    assert zero_conf.queues.get("anything") is not None
+
+
+def test_cap_impossible_cu_fails_fast():
+    """A CU that could never fit its queue's max share fails with a
+    diagnostic instead of pending forever (mirrors gang-too-big)."""
+    sched = make_sched(4, queues=[QueueConfig("small", max_chips=2)])
+    cu = cu_of(3, queue="small")
+    sched.submit(cu)
+    assert sched.try_schedule() == []
+    assert cu.state is CUState.FAILED
+    assert "max share" in str(cu.error)
+    # transiently-over-cap CUs still just wait
+    ok1, ok2 = cu_of(2, queue="small"), cu_of(2, queue="small")
+    sched.submit(ok1)
+    sched.submit(ok2)
+    assert len(sched.try_schedule()) == 1       # ok2 queued behind the cap
+    assert ok2.state is CUState.PENDING
+
+
+def test_cap_blocked_preemptor_evicts_only_its_own_queue():
+    """A preemptor whose queue sits at max share may still preempt
+    lower-priority work WITHIN its queue (that frees cap headroom), but
+    never other queues' CUs — evicting them frees chips the cap would
+    still refuse, which is churn, not progress."""
+    def setup(gang_hog):
+        sched = make_sched(2, policy="capacity",
+                           queues=[QueueConfig("capped", max_chips=1),
+                                   QueueConfig("other")])
+        low = cu_of(queue="other")
+        hog = cu_of(queue="capped", gang=gang_hog)
+        for c in (low, hog):
+            sched.submit(c)
+        for cu, _ in sched.try_schedule():
+            cu._set_state(CUState.RUNNING)
+        vip = cu_of(1, priority=9, queue="capped")
+        sched.submit(vip)
+        return sched, low, hog, vip
+
+    sched, low, hog, vip = setup(gang_hog=False)
+    victims = sched.preemption_victims(vip, {low.uid: low, hog.uid: hog})
+    assert victims == [hog.uid]         # intra-queue priority preemption
+    # an unevictable same-queue occupant (gang): no cross-queue victims
+    # are taken as a substitute — the churn-loop guard
+    sched, low, hog, vip = setup(gang_hog=True)
+    assert sched.preemption_victims(vip, {low.uid: low, hog.uid: hog}) == []
+
+
+def test_cap_blocked_preemption_fires_even_with_free_chips():
+    """With free chips available but the preemptor's queue at max
+    share, the cap (not chips) is the blocker — intra-queue preemption
+    must still fire to free cap headroom."""
+    sched = make_sched(3, policy="capacity",
+                       queues=[QueueConfig("capped", max_chips=1)])
+    hog = cu_of(queue="capped")
+    sched.submit(hog)
+    for cu, _ in sched.try_schedule():
+        cu._set_state(CUState.RUNNING)
+    assert sched.n_free == 2                    # chips are NOT the problem
+    vip = cu_of(1, priority=9, queue="capped")
+    sched.submit(vip)
+    assert sched.preemption_victims(vip, {hog.uid: hog}) == [hog.uid]
+
+
+def test_guaranteed_hbm_backs_the_chip_floor():
+    """guaranteed_hbm is enforced through the chip-denominated floor:
+    HBM travels with chips, so ceil(hbm / hbm_per_chip) chips are
+    protected."""
+    sched = make_sched(4, hbm=16, policy="capacity",
+                       queues=[QueueConfig("mem", guaranteed_hbm=33)])
+    assert sched.guarantee_floor() == 0          # idle: nothing pinned
+    for _ in range(3):
+        sched.submit(cu_of(queue="mem", memory_bytes=16))
+    assert sched.guarantee_floor() == 3          # ceil(33/16) = 3 chips
+
+
+def test_queue_acl_rejects_unauthorized_tenant():
+    sched = make_sched(2, queues=[QueueConfig(
+        "secure", acl=frozenset({"alice"}))])
+    sched.submit(cu_of(queue="secure", tenant="alice"))   # allowed
+    with pytest.raises(PermissionError, match="secure"):
+        sched.submit(cu_of(queue="secure", tenant="bob"))
+    with pytest.raises(PermissionError):
+        sched.submit(cu_of(queue="secure"))               # anonymous
+
+
+def test_mode1_carve_respects_queue_caps_and_charges_usage():
+    """A Mode-I carve goes through the same queue admission as CUs: the
+    ACL and max share apply, and carved chips are charged to the queue
+    until restore — carving is not a cap bypass."""
+    sched = make_sched(4, queues=[QueueConfig("a", max_chips=2),
+                                  QueueConfig("default")])
+    take = sched.carve_out(2, queue="a")
+    assert sched.queues.get("a").chips_used == 2
+    with pytest.raises(RuntimeError, match="max share"):
+        sched.carve_out(1, queue="a")
+    sched.restore(take)
+    assert sched.queues.get("a").chips_used == 0
+    # the HBM cap binds carves too (hbm=16/chip here)
+    memq = make_sched(4, hbm=16, queues=[QueueConfig("m", max_hbm=16)])
+    memq.carve_out(1, queue="m")
+    with pytest.raises(RuntimeError, match="HBM"):
+        memq.carve_out(1, queue="m")
+    secured = make_sched(2, queues=[QueueConfig(
+        "sec", acl=frozenset({"x"}))])
+    with pytest.raises(PermissionError):
+        secured.carve_out(1, queue="sec", tenant="y")
+    with pytest.raises(ValueError, match="untagged"):
+        secured.carve_out(1)                  # strict: no implicit default
+
+
+def test_rejected_submit_leaves_no_zombie_cu_in_agent():
+    """A routing rejection must not leave a NEW CU registered in the
+    agent's table (it would be scanned by every preemption/straggler
+    pass forever)."""
+    pm = PilotManager(ResourceManager(devices=jax.devices() * 2))
+    try:
+        pilot = pm.submit(PilotDescription(
+            n_chips=2, queues=[QueueConfig("only")]))
+        with pytest.raises(ValueError, match="unknown queue"):
+            pilot.submit(ComputeUnitDescription(
+                fn=lambda: None, queue="typo", needs_mesh=False))
+        assert pilot.agent._cus == {}
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------- Session tenancy
+def test_session_tenant_context_tags_and_limits_stages():
+    rm = ResourceManager(devices=jax.devices() * 4)
+    s = Session(rm)
+    try:
+        s.add_pilot(PilotDescription(n_chips=4, name="p", runtime="hpc",
+                                     enable_speculation=False))
+        alice = s.tenant("alice", max_concurrent_stages=1)
+        live, peak = [0], [0]
+        gate = threading.Lock()
+
+        def work(mesh=None):
+            with gate:
+                live[0] += 1
+                peak[0] = max(peak[0], live[0])
+            time.sleep(0.05)
+            with gate:
+                live[0] -= 1
+            return 1
+
+        stages = [hpc_stage(f"s{i}", work, n_chips=1, gang=False)
+                  for i in range(3)]
+        out = alice.run(stages)
+        assert sum(out.values()) == 3
+        assert peak[0] == 1                 # admission budget enforced
+        assert alice.stats == {"submitted": 3, "completed": 3}
+        for i in range(3):
+            assert s.placements[f"s{i}"]["tenant"] == "alice"
+        # the tenant's CUs landed in the tenant's queue on the pilot
+        q = s.pilots["p"].agent.scheduler.queues.get("alice")
+        assert q is not None
+        assert s.tenant("alice") is alice   # idempotent fetch
+    finally:
+        s.shutdown()
+
+
+# ------------------------------------------------- serve tenant budgets
+def _engine_stub(slots=4, tenant_budget=None, default_budget=None):
+    """ServeEngine admission state without the model machinery."""
+    from repro.serve.engine import ServeEngine
+    eng = object.__new__(ServeEngine)
+    eng.slots = slots
+    eng.tenant_budget = tenant_budget
+    eng.default_tenant_budget = default_budget
+    eng.active = [None] * slots
+    eng._waiting = []
+    return eng
+
+
+def test_serve_engine_tenant_budget_skips_flooding_tenant():
+    from repro.serve.engine import Request
+    import numpy as np
+    toks = np.zeros(4, np.int32)
+    a = [Request(uid=i, tokens=toks, tenant="a") for i in range(3)]
+    b = Request(uid=9, tokens=toks, tenant="b")
+    eng = _engine_stub(tenant_budget={"a": 2})
+    eng._waiting = a + [b]
+    # a fills up to its budget, then b jumps its third request
+    picked = []
+    for _ in range(3):
+        req = eng._next_admissible()
+        picked.append(req)
+        eng._waiting.remove(req)
+        eng.active[eng.active.index(None)] = req
+    assert picked == [a[0], a[1], b]
+    assert eng._next_admissible() is None      # a's last waits for a slot
+    eng.active[0] = None                       # one a-slot frees up
+    assert eng._next_admissible() is a[2]
+
+
+def test_serve_engine_no_budget_is_strict_fifo():
+    from repro.serve.engine import Request
+    import numpy as np
+    toks = np.zeros(4, np.int32)
+    reqs = [Request(uid=i, tokens=toks, tenant="a") for i in range(4)]
+    eng = _engine_stub(slots=2)
+    eng._waiting = list(reqs)
+    assert eng._next_admissible() is reqs[0]
+
+
+def test_serve_engine_zero_budget_rejects_at_intake():
+    from repro.serve.engine import Request, ServeEngine
+    import numpy as np
+    import queue as queue_mod
+    eng = _engine_stub(tenant_budget={"blocked": 0})
+    eng.queue = queue_mod.Queue()
+    req = Request(uid=0, tokens=np.zeros(4, np.int32), tenant="blocked")
+    with pytest.raises(PermissionError, match="blocked"):
+        ServeEngine.submit(eng, req)
+    assert eng.queue.empty()                  # nothing wedges the drain
+
+
+def test_session_tenant_reregistration_conflict_raises():
+    s = Session(ResourceManager(devices=jax.devices()))
+    try:
+        s.tenant("a", max_concurrent_stages=2)
+        assert s.tenant("a") is s.tenant("a")            # bare refetch ok
+        assert s.tenant("a", max_concurrent_stages=2)    # same settings ok
+        with pytest.raises(ValueError, match="already registered"):
+            s.tenant("a", max_concurrent_stages=5)
+        with pytest.raises(ValueError, match="already registered"):
+            s.tenant("a", queue="gold")
+    finally:
+        s.shutdown()

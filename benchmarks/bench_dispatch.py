@@ -1,0 +1,186 @@
+"""Dispatch-throughput benchmark: Raptor overlay vs per-CU scheduler.
+
+The paper's Fig-5 analysis shows per-task overhead (YARN's two-phase
+AppMaster -> container allocation) dominating short tasks; our
+per-ComputeUnit path pays the same tax — scheduler admission, queue
+arbitration and an agent wake per task.  The Raptor overlay
+(``core/raptor.py``) amortizes admission over one long-running gang CU
+whose persistent workers pull micro-tasks from an in-pilot queue.
+
+This sweep submits N no-op tasks through both paths at
+N = 10^2 .. 10^4 (10^5 for the overlay with ``--full``; the per-CU
+path's queue scan is superlinear, so its top tier stays at 10^4) and
+reports tasks/sec plus p50/p99 *dispatch latency* — submit to
+execution-start, the micro-task analogue of ``CU.overhead_s()``.
+
+    PYTHONPATH=src python benchmarks/bench_dispatch.py [--smoke] [--full]
+
+``--smoke`` also writes ``BENCH_dispatch.json`` (CI tracks the perf
+trajectory) and fails fast if the overlay does not sustain >= 10x the
+scheduler's dispatch rate at the 10^4 tier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+
+from repro.core import (ComputeUnitDescription, PilotDescription,
+                        PilotManager, ResourceManager)
+
+RATIO_FLOOR = 10.0       # overlay must beat the scheduler path by this
+RATIO_TIER = 10_000      # ...at this tier (the acceptance criterion)
+
+
+def _noop() -> None:
+    return None
+
+
+def run_trial(path: str, n_tasks: int, *, n_slots: int = 8,
+              n_workers: int = 4) -> Dict:
+    """Push n_tasks no-ops through one dispatch path on a fresh pilot.
+
+    ``path='scheduler'``: one 1-chip CU per task, batch-submitted
+    (``Agent.submit_many``) so the comparison isolates per-task
+    admission/bind cost, not submit-call overhead.
+    ``path='overlay'``: the same tasks as Raptor micro-tasks.
+    """
+    rm = ResourceManager(devices=jax.devices() * n_slots)
+    pm = PilotManager(rm)
+    pilot = pm.submit(PilotDescription(
+        n_chips=n_slots, name="bench", enable_speculation=False))
+    try:
+        if path == "overlay":
+            master = pilot.spawn_raptor(n_workers)
+            t0 = time.monotonic()
+            tasks = master.submit_many([_noop] * n_tasks, tag="bench")
+            for t in tasks:
+                t.wait(600)
+            wall = time.monotonic() - t0
+            lat = [d for d in (t.dispatch_s() for t in tasks)
+                   if d is not None]
+            master.shutdown()
+        elif path == "scheduler":
+            descs = [ComputeUnitDescription(fn=_noop, n_chips=1,
+                                            needs_mesh=False, tag="bench")
+                     for _ in range(n_tasks)]
+            t0 = time.monotonic()
+            cus = pilot.agent.submit_many(descs)
+            for cu in cus:
+                cu.wait(600)
+            wall = time.monotonic() - t0
+            lat = [w for w in (cu.overhead_s() for cu in cus)
+                   if w is not None]
+        else:
+            raise ValueError(f"unknown path {path!r}")
+        return {
+            "path": path,
+            "n_tasks": n_tasks,
+            "wall_s": wall,
+            "tasks_per_s": n_tasks / wall,
+            "p50_dispatch_s": float(np.percentile(lat, 50)) if lat else None,
+            "p99_dispatch_s": float(np.percentile(lat, 99)) if lat else None,
+        }
+    finally:
+        pm.shutdown()
+
+
+def sweep(tiers: List[int], *, n_slots: int = 8, n_workers: int = 4,
+          scheduler_max: int = 10_000) -> List[Dict]:
+    out = []
+    for n in tiers:
+        out.append(run_trial("overlay", n, n_slots=n_slots,
+                             n_workers=n_workers))
+        if n <= scheduler_max:
+            out.append(run_trial("scheduler", n, n_slots=n_slots,
+                                 n_workers=n_workers))
+        else:
+            print(f"# scheduler path skipped at n={n} "
+                  f"(superlinear queue scan; cap={scheduler_max})",
+                  file=sys.stderr)
+    return out
+
+
+def ratio_at(results: List[Dict], tier: int) -> Optional[float]:
+    """overlay/scheduler tasks-per-second ratio at one tier."""
+    by = {(r["path"], r["n_tasks"]): r for r in results}
+    ov, sc = by.get(("overlay", tier)), by.get(("scheduler", tier))
+    if ov is None or sc is None:
+        return None
+    return ov["tasks_per_s"] / max(sc["tasks_per_s"], 1e-9)
+
+
+def run(smoke: bool = True) -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'dispatch')."""
+    tiers = [100, 1_000] if smoke else [100, 1_000, 10_000]
+    rows = []
+    for r in sweep(tiers):
+        p99 = r["p99_dispatch_s"]
+        rows.append({
+            "name": f"dispatch/{r['path']}_{r['n_tasks']}",
+            "us_per_call": r["wall_s"] / r["n_tasks"] * 1e6,
+            "derived": (f"tasks_per_s={r['tasks_per_s']:.0f} "
+                        f"p99_dispatch_us="
+                        f"{(p99 or 0.0) * 1e6:.0f}")})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: also write --json (default "
+                         "BENCH_dispatch.json) and fail below the "
+                         f"{RATIO_FLOOR:.0f}x ratio floor at n={RATIO_TIER}")
+    ap.add_argument("--full", action="store_true",
+                    help="add the 10^5 tier (overlay only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (implied by --smoke)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--scheduler-max", type=int, default=10_000,
+                    help="largest tier for the per-CU path (its queue "
+                         "scan is superlinear)")
+    args = ap.parse_args()
+
+    tiers = [100, 1_000, 10_000]
+    if args.full:
+        tiers.append(100_000)
+    results = sweep(tiers, n_slots=args.slots, n_workers=args.workers,
+                    scheduler_max=args.scheduler_max)
+
+    hdr = (f"{'path':>10} {'n_tasks':>8} {'wall_s':>8} {'tasks/s':>9} "
+           f"{'p50 dispatch':>13} {'p99 dispatch':>13}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in results:
+        print(f"{r['path']:>10} {r['n_tasks']:>8d} {r['wall_s']:>8.3f} "
+              f"{r['tasks_per_s']:>9.0f} "
+              f"{(r['p50_dispatch_s'] or 0) * 1e6:>11.0f}us "
+              f"{(r['p99_dispatch_s'] or 0) * 1e6:>11.0f}us")
+
+    ratio = ratio_at(results, RATIO_TIER)
+    if ratio is not None:
+        print(f"\noverlay vs scheduler at n={RATIO_TIER}: {ratio:.1f}x "
+              f"(floor {RATIO_FLOOR:.0f}x)")
+
+    json_path = args.json or ("BENCH_dispatch.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": results,
+                       "ratio_at_10k": ratio,
+                       "ratio_floor": RATIO_FLOOR}, f, indent=2)
+        print(f"wrote {json_path}")
+
+    if args.smoke and ratio is not None and ratio < RATIO_FLOOR:
+        print(f"FAIL: overlay only {ratio:.1f}x the scheduler path at "
+              f"n={RATIO_TIER} (floor {RATIO_FLOOR:.0f}x)", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ the CPU container cannot reproduce (noted in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -35,13 +36,14 @@ def _cu_overheads(pilot, n: int, app_id, tag: str) -> List[float]:
     return outs
 
 
-def run() -> List[Dict]:
+def run(smoke: bool = False) -> List[Dict]:
     rows = []
+    n_startup, n_warm, n_bench = (2, 1, 8) if smoke else (5, 3, 20)
 
     # --- pilot startup: plain HPC pilot vs Mode I (spawn analytics) ---
     for mode, spawn in (("pilot_plain", False), ("pilot_modeI_spawn", True)):
         samples = []
-        for _ in range(5):
+        for _ in range(n_startup):
             pm = PilotManager(ResourceManager())
             t0 = time.monotonic()
             pilot = pm.submit(PilotDescription(n_chips=1))
@@ -69,8 +71,8 @@ def run() -> List[Dict]:
             n_chips=1, reuse_app_master=reuse,
             app_master_overhead_s=AM_OVERHEAD_S))
         app = "bench-app" if reuse else None
-        _cu_overheads(pilot, 3, app, "warm")          # warm the path
-        outs = _cu_overheads(pilot, 20, app, "bench")
+        _cu_overheads(pilot, n_warm, app, "warm")     # warm the path
+        outs = _cu_overheads(pilot, n_bench, app, "bench")
         stats = pilot.agent.scheduler.stats
         rows.append({
             "name": f"fig5/cu_overhead_reuse_{'on' if reuse else 'off'}",
@@ -80,3 +82,19 @@ def run() -> List[Dict]:
                         f"am_reused={stats['app_masters_reused']}")})
         pm.shutdown()
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer repetitions for CI (seconds)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        derived = str(r["derived"]).replace(",", ";")
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig8      — Session placement sweep: locality vs movement cost crossover
   elastic   — static split vs ControlPlane rebalancing (makespan, moved B)
   fairshare — 3 tenants at 6:1:1 load: FIFO vs DRF vs Capacity policies
+  dispatch  — Raptor overlay vs per-CU scheduler dispatch throughput
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
@@ -20,18 +21,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
-                             "fairshare", "kernels", "roofline"])
+                             "fairshare", "dispatch", "kernels", "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import (bench_elastic, bench_fairshare, bench_kernels,
-                            bench_session_placement, fig5_overheads,
-                            fig6_kmeans, roofline_table)
+    from benchmarks import (bench_dispatch, bench_elastic, bench_fairshare,
+                            bench_kernels, bench_session_placement,
+                            fig5_overheads, fig6_kmeans, roofline_table)
     sections = {
         "fig5": fig5_overheads.run,
         "fig6": fig6_kmeans.run,
         "fig8": bench_session_placement.run,
         "elastic": bench_elastic.run,
         "fairshare": bench_fairshare.run,
+        "dispatch": bench_dispatch.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,
     }

@@ -16,6 +16,7 @@ from .dataplane import (DataPlane, Lineage, Link, PilotData,  # noqa: F401
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401
 from .queues import (CapacityPolicy, DrfPolicy, FifoPolicy,  # noqa: F401
                      QueueConfig, QueueTree, SchedulingPolicy, make_policy)
+from .raptor import MicroTask, RaptorMaster  # noqa: F401
 from .resource_manager import ResourceManager  # noqa: F401
 from .scheduler import YarnStyleScheduler  # noqa: F401
 from .session import (Session, Stage, TenantContext,  # noqa: F401

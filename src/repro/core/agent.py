@@ -71,7 +71,12 @@ class Agent:
         self._executor_cache: Dict[Any, Any] = {}
         self.enable_speculation = enable_speculation
         self.status: Dict[str, Any] = {}
+        self._status_version = -1     # scheduler version the status reflects
+        self._overlays: Dict[str, Any] = {}   # Raptor masters on this pilot
         self._lock = threading.Lock()
+        # event-driven wake: the scheduler signals submits/releases/grows
+        # directly instead of the loop discovering them on a fixed poll
+        self.scheduler.notify = self._wake.set
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -80,6 +85,11 @@ class Agent:
         self._thread.start()
 
     def stop(self) -> None:
+        for m in self.overlays():   # halt straggler overlays (no drain)
+            try:
+                m.shutdown(drain=False, timeout=2.0)
+            except Exception:       # noqa: BLE001 — stop must not raise
+                pass
         self._stop.set()
         self._wake.set()
         if self._thread is not None:
@@ -98,6 +108,33 @@ class Agent:
         self._wake.set()
         return cu
 
+    def submit_many(self, descs: Sequence[ComputeUnitDescription]
+                    ) -> List[ComputeUnit]:
+        """Batched submit: routing is validated for the whole batch and
+        the queue is extended under ONE scheduler-lock acquisition
+        (``scheduler.submit_many``), with a single agent wake at the
+        end.  All-or-nothing: a routing rejection admits no CU."""
+        cus = [ComputeUnit(d) for d in descs]
+        self.scheduler.submit_many(cus)
+        with self._lock:
+            for cu in cus:
+                self._cus[cu.uid] = cu
+        self._wake.set()
+        return cus
+
+    # ------------------------------------------------------------- overlays
+    def register_overlay(self, master) -> None:
+        with self._lock:
+            self._overlays[master.uid] = master
+
+    def unregister_overlay(self, master) -> None:
+        with self._lock:
+            self._overlays.pop(master.uid, None)
+
+    def overlays(self) -> List:
+        with self._lock:
+            return list(self._overlays.values())
+
     def reserve_chips(self, n: int, *, tenant: Optional[str] = None,
                       queue: Optional[str] = None) -> List[int]:
         """Take n chips out of the slot table (Mode-I analytics carve-out).
@@ -115,14 +152,21 @@ class Agent:
     def _loop(self) -> None:
         while not self._stop.is_set():
             self._check_preemption()
-            bound = self.scheduler.try_schedule()
-            for cu, idxs in bound:
+            # schedule_round binds and reads the binding generation in
+            # ONE lock acquisition (try_schedule + per-CU binding_gen
+            # used to take the lock again for every bound CU)
+            for cu, idxs, gen in self.scheduler.schedule_round():
                 cu.assigned_devices = self.scheduler.devices_of(idxs)
-                gen = self.scheduler.binding_gen(cu)
                 self._pool.submit(self._spawn, cu, gen)
             self._check_stragglers()
             self._heartbeat()
-            self._wake.wait(timeout=0.02)
+            # event-driven wake: submits/releases/restores signal _wake
+            # via scheduler.notify, so the timeout is only a safety net.
+            # Poll fast solely while the straggler watchdog has running
+            # CUs to time; an idle (or speculation-off) agent sleeps.
+            backlog = self.scheduler.backlog()
+            watching = self.enable_speculation and backlog["busy_chips"] > 0
+            self._wake.wait(timeout=0.02 if watching else 0.25)
             self._wake.clear()
 
     # ------------------------------------------------------------ heartbeat
@@ -134,6 +178,17 @@ class Agent:
         if not force and now - getattr(self, "_last_beat", 0.0) < 0.25:
             return
         self._last_beat = now
+        # dirty-flag fast path: when the scheduler version hasn't moved
+        # since the last beat, nothing the snapshot reports has changed —
+        # skip re-walking CU states and queues entirely (the ControlPlane
+        # keeps polling idle pilots; beats must not cost lock traffic).
+        version = self.scheduler.version()
+        overlays = self.overlays()
+        if (not force and self.status and not overlays
+                and version == self._status_version):
+            self.status["t"] = now
+            return
+        self._status_version = version
         with self._lock:
             states: Dict[str, int] = {}
             for cu in self._cus.values():
@@ -153,6 +208,9 @@ class Agent:
             "ema_runtimes": ema,
             "cu_states": states,
             "scheduler": dict(self.scheduler.stats),
+            # overlay pressure (pending depth, EMA micro-task runtimes,
+            # backlog-per-worker) for ControlPlane.scale_overlays
+            "overlays": {m.uid: m.snapshot() for m in overlays},
         }
 
     def heartbeat(self) -> Dict[str, Any]:

@@ -209,6 +209,41 @@ class ControlPlane:
                 self.in_flight[src.uid] += n
                 self.in_flight[dst.uid] -= n
 
+    # ------------------------------------------------------------ overlays
+    # Raptor overlays export backlog-per-worker through the heartbeat
+    # ("overlays"); grow one when its queue is deep and chips are free,
+    # shrink extensions back when it goes quiet.
+    GROW_BACKLOG_PER_WORKER = 8.0
+    SHRINK_BACKLOG_PER_WORKER = 1.0
+
+    def scale_overlays(self,
+                       snap: Optional[Dict[str, Dict[str, Any]]] = None
+                       ) -> Dict[str, int]:
+        """One overlay-elasticity step over every active pilot: for each
+        Raptor overlay in the heartbeat, grow (+1 worker-extension CU,
+        if the pilot has a free chip) when pending/worker exceeds
+        GROW_BACKLOG_PER_WORKER, shrink one extension when it falls
+        under SHRINK_BACKLOG_PER_WORKER.  Returns overlay name -> worker
+        delta applied."""
+        snap = snap if snap is not None else self.poll()
+        deltas: Dict[str, int] = {}
+        for m in snap.values():
+            pilot = m["pilot"]
+            for master in pilot.agent.overlays():
+                ov = m.get("overlays", {}).get(master.uid)
+                if ov is None or not master.alive:
+                    continue
+                bpw = ov.get("backlog_per_worker", 0.0)
+                if (bpw > self.GROW_BACKLOG_PER_WORKER
+                        and m.get("free_chips", 0) > 0):
+                    master.grow(1)
+                    deltas[master.uid] = deltas.get(master.uid, 0) + 1
+                elif bpw < self.SHRINK_BACKLOG_PER_WORKER:
+                    shrunk = master.shrink(1)
+                    if shrunk:
+                        deltas[master.uid] = deltas.get(master.uid, 0) - shrunk
+        return deltas
+
     # ---------------------------------------------------------- autonomous
     def start(self, interval_s: float = 0.25) -> None:
         """Poll-and-rebalance on a daemon thread until :meth:`stop`."""
@@ -223,6 +258,7 @@ class ControlPlane:
         while not self._stop.wait(interval_s):
             try:
                 self.rebalance()
+                self.scale_overlays()
             except BaseException as e:  # noqa: BLE001 — keep the loop alive
                 self.errors.append(e)
 

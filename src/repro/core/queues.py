@@ -76,6 +76,10 @@ class TenantQueue:
         self.pending: List[Entry] = []
         self.chips_used = 0
         self.hbm_used = 0
+        # Raptor micro-tasks: chips lent by an overlay worker count in
+        # chips_used (so caps/DRF see them) and are itemized here
+        self.micro_running = 0        # gauge: micro-tasks on chips now
+        self.micro_done = 0           # cumulative completed micro-tasks
 
     @property
     def name(self) -> str:
@@ -103,6 +107,8 @@ class TenantQueue:
             "chips_used": self.chips_used,
             "hbm_used": self.hbm_used,
             "guaranteed_chips": self.config.guaranteed_chips,
+            "micro_running": self.micro_running,
+            "micro_done": self.micro_done,
         }
 
 
@@ -188,6 +194,25 @@ class QueueTree:
         if q is not None:
             q.chips_used = max(q.chips_used - chips, 0)
             q.hbm_used = max(q.hbm_used - hbm, 0)
+
+    def micro_start(self, name: str, hbm: int) -> None:
+        """A Raptor worker starts a micro-task for this queue: one chip
+        (the worker's) plus the task's HBM counts as the queue's usage —
+        DRF dominant shares and Capacity/max caps see micro-task load
+        exactly like CU load."""
+        q = self.queues.get(name)
+        if q is not None:
+            q.chips_used += 1
+            q.hbm_used += hbm
+            q.micro_running += 1
+
+    def micro_finish(self, name: str, hbm: int) -> None:
+        q = self.queues.get(name)
+        if q is not None:
+            q.chips_used = max(q.chips_used - 1, 0)
+            q.hbm_used = max(q.hbm_used - hbm, 0)
+            q.micro_running = max(q.micro_running - 1, 0)
+            q.micro_done += 1
 
     # ------------------------------------------------------------- queries
     def pending_entries(self) -> List[Tuple[Entry, TenantQueue]]:

@@ -95,9 +95,40 @@ class YarnStyleScheduler:
         self.gang_reservation_rounds = gang_reservation_rounds
         self.data = data_registry or DataPlane()
         self._lock = threading.Lock()
+        # signaled whenever chips return to the free pool, so carve_out
+        # waiters wake on release/restore instead of sleep-polling
+        self._freed = threading.Condition(self._lock)
+        # monotonically bumped on any state mutation; backlog() reuses
+        # its cached snapshot while the version is unchanged, and the
+        # agent's heartbeat uses it as a dirty flag
+        self._version = 0
+        self._backlog_cache: Optional[Dict[str, Any]] = None
+        self._backlog_version = -1
+        # event hook: the agent points this at its wake event so submits
+        # and releases wake the scheduling loop instead of a fixed poll
+        self.notify: Optional[Any] = None
         self.stats = {"scheduled": 0, "locality_hits": 0, "locality_misses": 0,
                       "app_masters_started": 0, "app_masters_reused": 0,
-                      "gang_reservations": 0, "carved_out": 0, "drained": 0}
+                      "gang_reservations": 0, "carved_out": 0, "drained": 0,
+                      "batch_submits": 0, "micro_charged": 0}
+
+    # ------------------------------------------------------- event plumbing
+    def _bump(self) -> None:
+        """Mark state dirty (must hold the lock): invalidates the cached
+        backlog snapshot the heartbeat reads."""
+        self._version += 1
+
+    def _notify(self) -> None:
+        """Wake the agent loop (called OUTSIDE the lock)."""
+        cb = self.notify
+        if cb is not None:
+            cb()
+
+    def version(self) -> int:
+        """Dirty counter: unchanged between two reads ⇒ no scheduler
+        state (queues, bindings, devices) changed between them."""
+        with self._lock:
+            return self._version
 
     # ----------------------------------------------------------- lifecycle
     def submit(self, cu: ComputeUnit) -> None:
@@ -107,6 +138,25 @@ class YarnStyleScheduler:
         with self._lock:
             self.queues.submit(cu)          # PermissionError on ACL violation
             cu._set_state(CUState.PENDING)
+            self._bump()
+        self._notify()
+
+    def submit_many(self, cus: Sequence[ComputeUnit]) -> None:
+        """Batched submit: ONE lock acquisition for the whole batch (the
+        overlay/fast-path entry — per-CU locking dominates dispatch at
+        10⁴+ tasks).  All-or-nothing on routing errors: every CU's queue
+        route is validated (ACLs, declared-queue strictness) before any
+        CU is enqueued, so a bad CU mid-batch cannot leave a partial
+        batch behind."""
+        with self._lock:
+            for cu in cus:
+                self.queues.route(cu)       # raises before anything queued
+            for cu in cus:
+                self.queues.submit(cu)
+                cu._set_state(CUState.PENDING)
+            self.stats["batch_submits"] += 1
+            self._bump()
+        self._notify()
 
     def devices_of(self, idxs: Sequence[int]) -> List:
         return [self._devices[i] for i in idxs]
@@ -240,12 +290,14 @@ class YarnStyleScheduler:
         self._gang_res_need = 0
 
     def _offer_freed_chip(self, i: int) -> None:
-        """A chip became available: feed the gang reservation first."""
+        """A chip became available: feed the gang reservation first.
+        Wakes carve_out waiters (must hold the lock)."""
         if (self._gang_res_uid is not None
                 and len(self._gang_res_chips) < self._gang_res_need):
             self._gang_res_chips.add(i)
         else:
             self._free.add(i)
+        self._freed.notify_all()
 
     def _capacity(self) -> int:
         """Live bindable slot count (carved chips will return; draining
@@ -253,13 +305,21 @@ class YarnStyleScheduler:
         return len(self._mem_free) - len(self._draining)
 
     def try_schedule(self) -> List[Tuple[ComputeUnit, List[int]]]:
-        """One scheduling round: returns newly-bound (cu, device idxs).
+        """One scheduling round: returns newly-bound (cu, device idxs)."""
+        return [(cu, idxs) for cu, idxs, _gen in self.schedule_round()]
+
+    def schedule_round(self) -> List[Tuple[ComputeUnit, List[int], int]]:
+        """One scheduling round: returns newly-bound (cu, device idxs,
+        binding generation).  The generation rides along so the agent
+        gets it from the same lock acquisition as the bind — the old
+        per-CU ``binding_gen`` call re-took the lock once per bound CU.
 
         The policy re-picks the offering queue after every candidate, so
         usage-driven orders (capacity starvation ratio, DRF dominant
         share) react to binds made earlier in the same round; the fifo
         policy degenerates to the global (-priority, arrival) order."""
         out = []
+        dirty = False
         with self._lock:
             # a reservation whose holder left the queue is stale
             if (self._gang_res_uid is not None
@@ -282,6 +342,7 @@ class YarnStyleScheduler:
                 q = self.queues.queues[qname]
                 if cu.state is CUState.CANCELED:
                     q.remove(entry)
+                    dirty = True
                     if self._gang_res_uid == cu.uid:
                         self._clear_gang_reservation()
                     continue
@@ -291,6 +352,7 @@ class YarnStyleScheduler:
                         f"{self._capacity()}")
                     cu._set_state(CUState.FAILED)
                     q.remove(entry)
+                    dirty = True
                     continue
                 hbm_req = mem_per_chip(cu.desc.memory_bytes,
                                        cu.desc.n_chips) * cu.desc.n_chips
@@ -307,6 +369,7 @@ class YarnStyleScheduler:
                         f"({cfg.max_chips} chips / {cfg.max_hbm} HBM)")
                     cu._set_state(CUState.FAILED)
                     q.remove(entry)
+                    dirty = True
                     continue
                 # a CU over its queue's max share stays queued; a capped
                 # gang does not age a reservation either — parked chips
@@ -319,7 +382,9 @@ class YarnStyleScheduler:
                         self._note_gang_wait(cu)
                 else:
                     q.remove(entry)
-                    out.append((cu, cand))
+                    out.append((cu, cand, self._bound_gen[cu.uid]))
+            if out or dirty:
+                self._bump()
         return out
 
     # ----------------------------------------------------------- preemption
@@ -462,7 +527,10 @@ class YarnStyleScheduler:
             if usage is not None:
                 self.queues.uncharge(*usage)
             if not idxs:
+                if usage is not None:
+                    self._bump()
                 return
+            self._bump()
             mem_per = mem_per_chip(cu.desc.memory_bytes, cu.desc.n_chips)
             for i in idxs:
                 if i not in self._mem_free:
@@ -473,6 +541,7 @@ class YarnStyleScheduler:
                 self._offer_freed_chip(i)
             if not self.reuse_app_master:
                 self._app_masters.pop(cu.desc.app_id or cu.uid, None)
+        self._notify()
 
     # ------------------------------------------------------------ carve-out
     def carve_out(self, n: int, timeout: float = 30.0, *,
@@ -485,38 +554,47 @@ class YarnStyleScheduler:
         Carves go through the same queue admission as CUs: the target
         queue's ACL and max share apply, and the carved chips are
         charged to the queue until :meth:`restore` — a tenant cannot
-        side-step its caps by carving instead of submitting."""
+        side-step its caps by carving instead of submitting.
+
+        Waits on a :class:`threading.Condition` signaled whenever chips
+        return to the free pool (release/restore/add_devices) — no
+        sleep-poll: an idle waiter burns no CPU and wakes promptly."""
         deadline = time.monotonic() + timeout
-        while True:
-            with self._lock:
-                q = self.queues.admission_queue(queue, tenant)
-                cfg = q.config
-                if (cfg.max_chips is not None
-                        and q.chips_used + n > cfg.max_chips):
+
+        def check_caps(q) -> None:
+            cfg = q.config
+            if (cfg.max_chips is not None
+                    and q.chips_used + n > cfg.max_chips):
+                raise RuntimeError(
+                    f"carve of {n} chips would put queue {q.name!r} "
+                    f"over its max share ({q.chips_used} used, "
+                    f"max {cfg.max_chips})")
+            if (cfg.max_hbm is not None
+                    and q.hbm_used + n * self._hbm > cfg.max_hbm):
+                raise RuntimeError(
+                    f"carve of {n} chips ({n * self._hbm} HBM) would "
+                    f"put queue {q.name!r} over its max HBM share "
+                    f"({q.hbm_used} used, max {cfg.max_hbm})")
+
+        with self._freed:                         # == self._lock
+            q = self.queues.admission_queue(queue, tenant)
+            check_caps(q)
+            while len(self._free) < n:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._freed.wait(timeout=left):
                     raise RuntimeError(
-                        f"carve of {n} chips would put queue {q.name!r} "
-                        f"over its max share ({q.chips_used} used, "
-                        f"max {cfg.max_chips})")
-                if (cfg.max_hbm is not None
-                        and q.hbm_used + n * self._hbm > cfg.max_hbm):
-                    raise RuntimeError(
-                        f"carve of {n} chips ({n * self._hbm} HBM) would "
-                        f"put queue {q.name!r} over its max HBM share "
-                        f"({q.hbm_used} used, max {cfg.max_hbm})")
-                avail = sorted(self._free)
-                if len(avail) >= n:
-                    take = avail[:n]
-                    for i in take:
-                        self._free.discard(i)
-                        self._carved.add(i)
-                        self._carved_charge[i] = (q.name, self._mem_free[i])
-                        self.queues.charge(q.name, 1, self._mem_free[i])
-                        self._mem_free[i] = 0   # the chip's HBM goes with it
-                    self.stats["carved_out"] += n
-                    return take
-            if time.monotonic() >= deadline:
-                raise RuntimeError(f"could not carve out {n} chips (busy)")
-            time.sleep(0.01)
+                        f"could not carve out {n} chips (busy)")
+                check_caps(q)    # usage may have changed while waiting
+            take = sorted(self._free)[:n]
+            for i in take:
+                self._free.discard(i)
+                self._carved.add(i)
+                self._carved_charge[i] = (q.name, self._mem_free[i])
+                self.queues.charge(q.name, 1, self._mem_free[i])
+                self._mem_free[i] = 0   # the chip's HBM goes with it
+            self.stats["carved_out"] += n
+            self._bump()
+            return take
 
     def restore(self, idxs: Sequence[int]) -> None:
         """Return carved-out chips (and their HBM) to the slot table.
@@ -530,6 +608,71 @@ class YarnStyleScheduler:
                 qname, hbm = self._carved_charge.pop(i, (DEFAULT_QUEUE, 0))
                 self.queues.uncharge(qname, 1, hbm)
                 self._offer_freed_chip(i)
+                self._bump()
+        self._notify()
+
+    # ----------------------------------------------------- micro-task fast path
+    # The Raptor overlay (core/raptor.py) bypasses per-CU admission: its
+    # workers already hold chips through one long-running gang CU, and
+    # micro-tasks only need (a) the submit-time ACL/route check and
+    # (b) per-tenant usage charged against the QueueTree so Capacity/DRF
+    # caps and fairness still see micro-task load.  These three methods
+    # are the whole scheduler surface the overlay touches — each is one
+    # lock acquisition for a whole batch/decision.
+
+    def route_micro(self, queue: Optional[str],
+                    tenant: Optional[str]) -> str:
+        """Validated queue name for a micro-task submitter (ACL-checked,
+        strict on declared-queue pilots) — same admission rules as CUs."""
+        with self._lock:
+            return self.queues.admission_queue(queue, tenant).name
+
+    def acquire_micro(self, heads: Dict[str, Tuple[int, int]],
+                      hbms: Optional[Dict[str, int]] = None) -> Optional[str]:
+        """One overlay dispatch decision: among the queues with a head
+        micro-task (``heads`` maps queue name -> head sort key, ``hbms``
+        the head task's HBM bytes), drop those without cap headroom for
+        one more chip, let the pilot's scheduling policy pick the winner
+        (DRF dominant share and capacity starvation see micro charges
+        too), and charge it one chip + the head's HBM.  Returns the
+        charged queue name, or None when every candidate queue is at
+        its max share."""
+        hbms = hbms or {}
+        with self._lock:
+            eligible = {}
+            for name, key in heads.items():
+                q = self.queues.get(name)
+                if q is None:
+                    continue
+                cfg = q.config
+                if cfg.max_chips is not None \
+                        and q.chips_used + 1 > cfg.max_chips:
+                    continue
+                if cfg.max_hbm is not None \
+                        and q.hbm_used + hbms.get(name, 0) > cfg.max_hbm:
+                    continue
+                eligible[name] = key
+            if not eligible:
+                return None
+            totals = (max(self._capacity(), 1),
+                      max(self._capacity(), 1) * self._hbm)
+            qname = self.policy.pick_queue(self.queues, eligible, totals)
+            self.queues.micro_start(qname, hbms.get(qname, 0))
+            self.stats["micro_charged"] += 1
+            self._bump()
+            return qname
+
+    def micro_uncharge_many(self,
+                            charges: Sequence[Tuple[str, int]]) -> None:
+        """Batched completion flush: uncharge (queue, hbm) pairs under
+        ONE lock acquisition — the overlay's completion buffer drains
+        here instead of locking once per finished micro-task."""
+        if not charges:
+            return
+        with self._lock:
+            for qname, hbm in charges:
+                self.queues.micro_finish(qname, hbm)
+            self._bump()
 
     # -------------------------------------------------------------- drain
     def begin_drain(self, idxs: Sequence[int]) -> List[str]:
@@ -545,6 +688,7 @@ class YarnStyleScheduler:
             if (self._gang_res_uid is not None
                     and self._gang_res_need > self._capacity()):
                 self._clear_gang_reservation()  # can never fill now
+            self._bump()
             return [uid for uid, assigned in self._running.items()
                     if target & set(assigned)]
 
@@ -567,6 +711,7 @@ class YarnStyleScheduler:
                 self._mem_free.pop(i, None)
                 devs.append(self._devices[i])
             self.stats["drained"] += len(devs)
+            self._bump()
             return devs
 
     def max_gang_demand(self) -> int:
@@ -620,6 +765,7 @@ class YarnStyleScheduler:
             for uid, assigned in list(self._running.items()):
                 if set(assigned) & set(idxs):
                     impacted.append(uid)
+            self._bump()
         return impacted
 
     def add_devices(self, devices: Sequence) -> None:
@@ -629,6 +775,8 @@ class YarnStyleScheduler:
             for j in range(len(devices)):
                 self._mem_free[base + j] = self._hbm
                 self._offer_freed_chip(base + j)
+            self._bump()
+        self._notify()
 
     # ---------------------------------------------------------------- stats
     @property
@@ -644,12 +792,21 @@ class YarnStyleScheduler:
     def backlog(self) -> Dict[str, Any]:
         """Pressure inputs for the ControlPlane's heartbeat poll, with a
         per-tenant-queue breakdown under ``"queues"`` so the control
-        plane can reason about (pilot, queue) pressure and guarantees."""
+        plane can reason about (pilot, queue) pressure and guarantees.
+
+        Cached on the scheduler's version counter: a beat that lands on
+        an unchanged scheduler reuses the previous snapshot instead of
+        re-walking every queue under the lock (heartbeats at 4 Hz were
+        re-merging all pending entries even on an idle pilot).  Callers
+        must treat the returned dict as read-only."""
         with self._lock:
+            if (self._backlog_cache is not None
+                    and self._backlog_version == self._version):
+                return self._backlog_cache
             queued = [cu for (_, cu), _q in self.queues.pending_entries()
                       if not cu.done]
             busy = sum(len(v) for v in self._running.values())
-            return {
+            snap = {
                 "queue_len": len(queued),
                 "queued_chip_demand": sum(c.desc.n_chips for c in queued),
                 "n_free": len(self._free),
@@ -661,3 +818,6 @@ class YarnStyleScheduler:
                 "guarantee_floor": self.queues.guarantee_floor(),
                 "queues": self.queues.snapshot(),
             }
+            self._backlog_cache = snap
+            self._backlog_version = self._version
+            return snap

@@ -122,6 +122,12 @@ class TenantContext:
         self.stats["submitted"] += len(tagged)
         return self.session.run(tagged, **kw)
 
+    def map(self, fn: Callable, items: Sequence, **kw) -> List[Any]:
+        """Tenant-scoped :meth:`Session.map`: every micro-task is
+        charged to this tenant's queue (caps/fairness apply)."""
+        kw.setdefault("queue", self.queue)
+        return self.session.map(fn, items, tenant=self.name, **kw)
+
 
 class Session:
     def __init__(self, rm: Optional[ResourceManager] = None, *,
@@ -136,6 +142,7 @@ class Session:
         self._stages: Dict[str, Stage] = {}         # for rematerialization
         self._engines: Dict[str, Any] = {}          # pilot uid -> engine
         self._tenants: Dict[str, TenantContext] = {}
+        self._overlays: Dict[str, Any] = {}         # pilot uid -> RaptorMaster
         self._lock = threading.Lock()
         self._move_lock = threading.Lock()          # serializes input moves
 
@@ -177,7 +184,54 @@ class Session:
         return [p for p in self.pilots.values() if p.desc.runtime == runtime]
 
     def shutdown(self) -> None:
+        with self._lock:
+            overlays, self._overlays = list(self._overlays.values()), {}
+        for m in overlays:
+            m.shutdown(drain=True, timeout=30.0)
         self.pm.shutdown()
+
+    # ----------------------------------------------------------- micro-tasks
+    def _overlay_for(self, pilot: Optional[str],
+                     n_workers: Optional[int]):
+        """The Session's per-pilot Raptor overlay (created on first use,
+        reused after — the whole point is amortizing admission).  The
+        overlay's own gang CU is tenant-neutral (default queue); each
+        micro-task carries its submitter's tenant/queue."""
+        if pilot is not None:
+            target = self.pilots[pilot]
+        else:
+            cands = self.pilots_by_runtime(HPC) or list(self.pilots.values())
+            if not cands:
+                raise RuntimeError("session has no pilots to host an overlay")
+            # prefer an existing overlay's host, else the most-free pilot
+            with self._lock:
+                hosted = [p for p in cands if p.uid in self._overlays
+                          and self._overlays[p.uid].alive]
+            target = hosted[0] if hosted else max(
+                cands, key=lambda p: p.agent.scheduler.n_free)
+        with self._lock:
+            master = self._overlays.get(target.uid)
+        if master is not None and master.alive:
+            return master
+        n = n_workers or max(1, target.agent.scheduler.n_slots // 2)
+        master = target.spawn_raptor(n)
+        with self._lock:
+            self._overlays[target.uid] = master
+        return master
+
+    def map(self, fn: Callable, items: Sequence, *,
+            tenant: Optional[str] = None, queue: Optional[str] = None,
+            pilot: Optional[str] = None, n_workers: Optional[int] = None,
+            tag: str = "map", timeout: float = 600.0) -> List[Any]:
+        """Run ``fn(item)`` for each item as Raptor micro-tasks — no
+        per-item CU admission — and return the results in item order.
+        The first call lazily starts an overlay on ``pilot`` (or the
+        freest HPC pilot) and later calls reuse it; every micro-task is
+        charged to ``tenant``'s queue while it runs, so DRF/Capacity
+        caps hold over micro-task load too."""
+        master = self._overlay_for(pilot, n_workers)
+        tasks = master.map(fn, items, tenant=tenant, queue=queue, tag=tag)
+        return [t.wait(timeout) for t in tasks]
 
     # -------------------------------------------------------------- placer
     def _compatible(self, stage: Stage) -> List[Pilot]:

@@ -1,0 +1,428 @@
+"""Raptor micro-task overlay: result parity with the plain scheduler,
+per-tenant QueueTree accounting over micro-tasks, worker-death recovery,
+drain semantics, elasticity, and the scheduler fast path it rides on
+(batched submit, condition-based carve-out, version-cached backlog)."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.core import (ComputeUnitDescription, CUState, PilotDescription,
+                        PilotManager, QueueConfig, ResourceManager, Session)
+from repro.core.compute_unit import ComputeUnit
+from repro.core.scheduler import YarnStyleScheduler
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.i = i
+        self.platform = "fake"
+
+
+def make_sched(n=4, hbm=16, **kw):
+    kw.setdefault("locality_delay_rounds", 0)
+    return YarnStyleScheduler([FakeDevice(i) for i in range(n)], hbm, **kw)
+
+
+def cu_of(n_chips=1, **kw):
+    return ComputeUnit(ComputeUnitDescription(
+        fn=lambda: None, n_chips=n_chips, needs_mesh=False, **kw))
+
+
+TENANT_QUEUES = [QueueConfig("default", guaranteed_chips=2),
+                 QueueConfig("tA", guaranteed_chips=2, max_chips=2),
+                 QueueConfig("tB", guaranteed_chips=2)]
+
+
+def make_pilot(n=8, policy="fifo", queues=None, **kw):
+    rm = ResourceManager(devices=jax.devices() * n)
+    pm = PilotManager(rm)
+    pilot = pm.submit(PilotDescription(
+        n_chips=n, enable_speculation=False,
+        scheduler_policy=policy, queues=queues, **kw))
+    return pm, pilot
+
+
+def square(x):
+    return x * x
+
+
+# ------------------------------------------------------------------ parity
+def test_overlay_matches_plain_scheduler_results():
+    """The same task set through per-CU scheduling and through the
+    overlay produces identical results."""
+    pm, pilot = make_pilot(4)
+    try:
+        items = list(range(30))
+        cus = pilot.agent.submit_many([
+            ComputeUnitDescription(fn=square, args=(x,), n_chips=1,
+                                   needs_mesh=False) for x in items])
+        via_sched = [cu.wait(30) for cu in cus]
+
+        master = pilot.spawn_raptor(2)
+        via_overlay = [t.wait(30) for t in master.map(square, items)]
+        master.shutdown()
+        assert via_overlay == via_sched == [x * x for x in items]
+    finally:
+        pm.shutdown()
+
+
+def test_submit_many_is_order_stable_under_fifo():
+    """With one worker the overlay executes a batch in submit order
+    (the in-pilot queue preserves (-priority, seq) like the QueueTree)."""
+    pm, pilot = make_pilot(2)
+    try:
+        master = pilot.spawn_raptor(1)
+        ran = []
+        # lambdas are unpicklable -> by-reference fallback, so the
+        # appends hit THIS list (a picklable fn would mutate a copy)
+        tasks = master.submit_many(
+            [(lambda i=i: ran.append(i)) for i in range(50)])
+        for t in tasks:
+            t.wait(30)
+        master.shutdown()
+        assert ran == list(range(50))
+    finally:
+        pm.shutdown()
+
+
+def test_priority_beats_arrival_within_the_overlay():
+    pm, pilot = make_pilot(2)
+    try:
+        master = pilot.spawn_raptor(1)
+        gate = threading.Event()
+        ran = []
+        master.submit(gate.wait, 5)             # occupy the only worker
+        low = master.submit_many([(lambda s=f"low{i}": ran.append(s))
+                                  for i in range(3)], priority=0)
+        high = master.submit_many([(lambda s=f"high{i}": ran.append(s))
+                                   for i in range(3)], priority=5)
+        gate.set()
+        for t in low + high:
+            t.wait(30)
+        master.shutdown()
+        assert ran == ["high0", "high1", "high2", "low0", "low1", "low2"]
+    finally:
+        pm.shutdown()
+
+
+def test_errors_propagate_without_killing_the_worker():
+    pm, pilot = make_pilot(2)
+    try:
+        master = pilot.spawn_raptor(1)
+        bad = master.submit(lambda: 1 / 0)
+        with pytest.raises(RuntimeError):
+            bad.wait(30)
+        ok = master.submit(square, 7)
+        assert ok.wait(30) == 49                # same worker still serves
+        stats = master.shutdown()
+        assert stats["failed"] == 1 and stats["worker_deaths"] == 0
+    finally:
+        pm.shutdown()
+
+
+# -------------------------------------------------------------- accounting
+def test_micro_tasks_charge_the_submitting_tenants_queue():
+    """While a micro-task runs, ONE chip (and its HBM) is charged to the
+    submitter's queue — not the overlay host's — and released on flush."""
+    pm, pilot = make_pilot(8, policy="drf", queues=TENANT_QUEUES)
+    try:
+        master = pilot.spawn_raptor(2)
+        queues = pilot.agent.scheduler.queues.queues
+        gate = threading.Event()
+        t = master.submit(gate.wait, 5, tenant="tB", queue="tB",
+                          hbm_bytes=3)
+        deadline = time.monotonic() + 5
+        while queues["tB"].micro_running == 0:
+            assert time.monotonic() < deadline, "micro-task never charged"
+            time.sleep(0.005)
+        assert queues["tB"].chips_used == 1
+        assert queues["tB"].hbm_used == 3
+        assert queues["tA"].chips_used == 0
+        gate.set()
+        t.wait(30)
+        master.shutdown()
+        assert queues["tB"].chips_used == 0
+        assert queues["tB"].hbm_used == 0
+        assert queues["tB"].micro_running == 0
+        assert queues["tB"].micro_done == 1
+    finally:
+        pm.shutdown()
+
+
+def test_drf_caps_hold_over_micro_tasks():
+    """tA's max_chips=2 bounds its CONCURRENT micro-tasks at 2 even
+    though the overlay has 4 idle workers (the acceptance criterion:
+    bypassing admission must not bypass the caps)."""
+    pm, pilot = make_pilot(8, policy="drf", queues=TENANT_QUEUES)
+    try:
+        master = pilot.spawn_raptor(4)
+        lock = threading.Lock()
+        running, peak = [], [0]
+
+        def tracked(x):
+            with lock:
+                running.append(x)
+                peak[0] = max(peak[0], len(running))
+            time.sleep(0.03)
+            with lock:
+                running.remove(x)
+            return x
+
+        tasks = master.map(tracked, list(range(20)),
+                           tenant="tA", queue="tA")
+        assert [t.wait(60) for t in tasks] == list(range(20))
+        master.shutdown()
+        assert peak[0] <= 2, f"tA ran {peak[0]} concurrent micro-tasks"
+        assert peak[0] == 2, "cap never even reached — test is vacuous"
+    finally:
+        pm.shutdown()
+
+
+def test_unknown_queue_rejected_at_submit():
+    pm, pilot = make_pilot(4, policy="drf", queues=TENANT_QUEUES)
+    try:
+        master = pilot.spawn_raptor(1)
+        with pytest.raises(ValueError):
+            master.submit(square, 1, queue="nope")
+        master.shutdown()
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------------ worker death
+def test_worker_death_requeues_inflight_micro_task():
+    """A worker dying task-in-hand: the task's charge is released, the
+    task re-queued at the FRONT, a replacement worker spawned — no lost
+    work, no leaked accounting."""
+    pm, pilot = make_pilot(4)
+    try:
+        master = pilot.spawn_raptor(2)
+        gate = threading.Event()
+        doomed = master.worker_ids()[0]
+        master.fail_worker(doomed)
+        tasks = master.map(lambda x: gate.wait(5) and x, [1, 2, 3, 4])
+        time.sleep(0.2)          # let the doomed worker acquire and die
+        gate.set()
+        assert [t.wait(30) for t in tasks] == [1, 2, 3, 4]
+        deadline = time.monotonic() + 5
+        while master.stats["worker_deaths"] < 1:
+            assert time.monotonic() < deadline, "death never reaped"
+            time.sleep(0.01)
+        assert master.stats["requeued"] >= 1
+        deadline = time.monotonic() + 5
+        while len(master.worker_ids()) < 2:     # replacement respawned
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        stats = master.shutdown()
+        assert stats["completed"] == 4
+        # no leaked charge on the default queue after everything flushed
+        q = pilot.agent.scheduler.queues.queues["default"]
+        assert q.micro_running == 0
+    finally:
+        pm.shutdown()
+
+
+# ---------------------------------------------------------------- shutdown
+def test_shutdown_drains_pending_tasks():
+    """drain=True refuses new work but every already-queued micro-task
+    still executes before the master CU retires."""
+    pm, pilot = make_pilot(4)
+    try:
+        master = pilot.spawn_raptor(2)
+        tasks = master.map(square, list(range(200)))
+        stats = master.shutdown(drain=True)
+        assert [t.wait(1) for t in tasks] == [x * x for x in range(200)]
+        assert stats["completed"] == 200
+        assert master._cu.done                  # gang CU actually retired
+        with pytest.raises(RuntimeError):
+            master.submit(square, 1)            # closed to new work
+    finally:
+        pm.shutdown()
+
+
+def test_shutdown_without_drain_cancels_pending():
+    pm, pilot = make_pilot(2)
+    try:
+        master = pilot.spawn_raptor(1)
+        gate = threading.Event()
+        first = master.submit(gate.wait, 5)
+        pending = master.map(square, list(range(5)))
+        time.sleep(0.1)                         # first task is in flight
+        done = threading.Thread(
+            target=master.shutdown, kwargs={"drain": False})
+        done.start()
+        gate.set()
+        done.join(timeout=30)
+        assert not done.is_alive()
+        assert first.wait(5) is True            # in-flight task finished
+        for t in pending:
+            with pytest.raises(RuntimeError):
+                t.wait(1)
+    finally:
+        pm.shutdown()
+
+
+# -------------------------------------------------------------- elasticity
+def test_grow_and_shrink_extension_workers():
+    pm, pilot = make_pilot(6)
+    try:
+        master = pilot.spawn_raptor(2)
+        master.grow(2)
+        deadline = time.monotonic() + 10
+        while len(master.worker_ids()) < 4:
+            assert time.monotonic() < deadline, "extensions never started"
+            time.sleep(0.01)
+        assert master.shrink(1) == 1
+        deadline = time.monotonic() + 10
+        while len(master.worker_ids()) != 3:
+            assert time.monotonic() < deadline, "shrink never applied"
+            time.sleep(0.01)
+        # shrink never touches the base gang workers
+        assert master.shrink(5) == 1            # only 1 extension left
+        tasks = master.map(square, list(range(20)))
+        assert [t.wait(30) for t in tasks] == [x * x for x in range(20)]
+        master.shutdown()
+    finally:
+        pm.shutdown()
+
+
+def test_heartbeat_exports_overlay_backlog():
+    pm, pilot = make_pilot(4)
+    try:
+        master = pilot.spawn_raptor(1)
+        gate = threading.Event()
+        master.submit(gate.wait, 5)
+        master.map(square, list(range(9)))
+        hb = pilot.agent.heartbeat()
+        ov = hb["overlays"][master.uid]
+        assert ov["workers"] == 1
+        assert ov["pending"] >= 8
+        assert ov["backlog_per_worker"] >= 8
+        gate.set()
+        master.shutdown()
+        assert pilot.agent.heartbeat()["overlays"] == {}
+    finally:
+        pm.shutdown()
+
+
+def test_control_plane_grows_hot_overlay():
+    """A deep backlog per worker (> GROW threshold) with free chips on
+    the pilot makes scale_overlays add an extension worker."""
+    pm, pilot = make_pilot(6)
+    try:
+        master = pilot.spawn_raptor(1)
+        gate = threading.Event()
+        master.submit(gate.wait, 10)
+        tasks = master.map(lambda x: gate.wait(10) and x, list(range(30)))
+        deltas = pm.control_plane.scale_overlays()
+        assert deltas.get(master.uid, 0) == 1
+        gate.set()
+        for t in tasks:
+            t.wait(30)
+        master.shutdown()
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------------- session.map
+def test_session_map_routes_through_an_overlay():
+    rm = ResourceManager(devices=jax.devices() * 6)
+    s = Session(rm)
+    try:
+        s.add_pilot(PilotDescription(
+            n_chips=6, name="hpc0", scheduler_policy="drf",
+            queues=TENANT_QUEUES))
+        out = s.map(square, list(range(40)), tenant="tB", queue="tB")
+        assert out == [x * x for x in range(40)]
+        assert len(s._overlays) == 1
+        first = next(iter(s._overlays.values()))
+        s.map(square, [1, 2], tenant="tB", queue="tB")
+        assert next(iter(s._overlays.values())) is first   # reused
+        tb = s.tenant("tB2", queue="tB")
+        assert tb.map(square, [3]) == [9]
+        q = s.pilots["hpc0"].agent.scheduler.queues.queues["tB"]
+        assert q.micro_done >= 43
+    finally:
+        s.shutdown()
+
+
+# ------------------------------------------------- scheduler fast path
+def test_scheduler_submit_many_is_all_or_nothing():
+    # declaring queues switches routing to strict mode
+    sched = make_sched(4, queues=[QueueConfig("only"),
+                                  QueueConfig("default")])
+    good = [cu_of(queue="only") for _ in range(3)]
+    bad = cu_of(queue="nope")
+    with pytest.raises(ValueError):
+        sched.submit_many(good + [bad])
+    assert sched.backlog()["queue_len"] == 0    # nothing half-admitted
+    sched.submit_many(good)
+    assert sched.backlog()["queue_len"] == 3
+    assert sched.stats["batch_submits"] == 1
+
+
+def test_backlog_snapshot_cached_until_version_changes():
+    sched = make_sched(2)
+    b1 = sched.backlog()
+    assert sched.backlog() is b1                # same object: cache hit
+    v = sched.version()
+    sched.submit(cu_of())
+    assert sched.version() != v
+    b2 = sched.backlog()
+    assert b2 is not b1
+    assert b2["queue_len"] == 1
+    assert sched.backlog() is b2
+
+
+def test_carve_out_wakes_on_release_not_poll():
+    """carve_out blocks on a Condition and is woken by the release that
+    frees enough chips — well before its timeout."""
+    sched = make_sched(2)
+    cu = cu_of(2)
+    sched.submit(cu)
+    assert sched.try_schedule()                 # both chips busy
+    got = {}
+
+    def carve():
+        t0 = time.monotonic()
+        got["idxs"] = sched.carve_out(2, timeout=10.0)
+        got["dt"] = time.monotonic() - t0
+
+    th = threading.Thread(target=carve)
+    th.start()
+    time.sleep(0.15)                            # carver is parked
+    assert "idxs" not in got
+    cu._set_state(CUState.DONE)
+    sched.release(cu)
+    th.join(timeout=5)
+    assert len(got["idxs"]) == 2
+    assert got["dt"] < 5.0                      # woke on signal, not timeout
+    sched.restore(got["idxs"])
+
+
+def test_carve_out_times_out_when_chips_stay_busy():
+    sched = make_sched(2)
+    cu = cu_of(2)
+    sched.submit(cu)
+    assert sched.try_schedule()
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="busy"):
+        sched.carve_out(1, timeout=0.2)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_agent_wake_is_event_driven():
+    """The scheduler's notify hook is wired to the agent's wake event,
+    so a release wakes the loop without waiting out the poll timeout."""
+    pm, pilot = make_pilot(2)
+    try:
+        assert pilot.agent.scheduler.notify == pilot.agent._wake.set
+        pilot.agent._wake.clear()
+        sched = pilot.agent.scheduler
+        cu = cu_of()
+        sched.submit(cu)
+        assert pilot.agent._wake.is_set()       # submit notified the loop
+    finally:
+        pm.shutdown()

@@ -17,6 +17,7 @@ the drain-evict bytes from the ledger.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -116,7 +117,11 @@ def run(smoke: bool = True) -> List[Dict]:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep for CI (seconds, single imbalance)")
+                    help="tiny sweep for CI (seconds, single imbalance); "
+                         "also writes --json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default "
+                         "BENCH_elastic.json with --smoke)")
     ap.add_argument("--tasks", type=int, default=None,
                     help="cold-pilot task count (hot gets imbalance x)")
     ap.add_argument("--task-s", type=float, default=None)
@@ -134,6 +139,11 @@ def main() -> None:
         kw["n_slots"] = args.slots
 
     rows = sweep(**kw)
+    json_path = args.json or ("BENCH_elastic.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": rows}, f, indent=2)
+        print(f"wrote {json_path}")
     hdr = (f"{'imbalance':>9} {'static_s':>9} {'elastic_s':>10} "
            f"{'speedup':>8} {'moved':>6} {'rebal':>6} {'evict_B':>9} "
            f"{'final hot/cold':>14}")

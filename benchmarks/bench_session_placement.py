@@ -13,6 +13,7 @@ HPC pilot via a Mode-I carve-out (moving nothing).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -90,9 +91,18 @@ def run() -> List[Dict]:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep for CI (two costs, one dataset size)")
+                    help="tiny sweep for CI (two costs, one dataset "
+                         "size); also writes --json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default "
+                         "BENCH_placement.json with --smoke)")
     args = ap.parse_args()
     rows = sweep(smoke=args.smoke)
+    json_path = args.json or ("BENCH_placement.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": rows}, f, indent=2)
+        print(f"wrote {json_path}")
     hdr = (f"{'dcn $/B':>10} {'points':>7} {'placed_on':>9} {'mode':>12} "
            f"{'dcn_B':>9} {'ici_B':>9} {'score_hpc':>10} {'score_ana':>10} "
            f"{'wall_s':>7}")

@@ -1,0 +1,234 @@
+"""Staging-pipeline benchmark: async prefetch + replica cache vs
+synchronous input movement.
+
+The paper's Hadoop side stages data to/from HDFS around every run; the
+seed Session did the equivalent *synchronously* — a stage placed on a
+pilot without its inputs paid the DCN move on the critical path before
+its compute started.  The staging pipeline (``core/staging.py``)
+overlaps that movement with predecessor compute (prefetch at
+placement-decision time + delay scheduling) and keeps an LRU replica
+cache so repeat reads are short-circuit local; ``compress="int8"``
+additionally shrinks wire bytes ~4x for float32 payloads.
+
+Workload (DCN-heavy regime, ``simulate_time`` pays modeled transfer
+seconds in wall-clock):
+
+  * a chain of compute stages on pilot ``wrk``, each reading a distinct
+    dataset homed on pilot ``src`` — sync pays every transfer between
+    stages; prefetch promotes dataset i+1 while stage i computes;
+  * a ping-pong tail alternating pilots ``wrk``/``wrk2`` over ONE
+    shared dataset — sync's exclusive re-home pays the move every
+    flip; the replica cache pays once per pilot, then hits.
+
+    PYTHONPATH=src python benchmarks/bench_staging.py [--smoke] [--json P]
+
+``--smoke`` writes ``BENCH_staging.json`` and fails unless prefetch
+beats sync by >= 1.3x makespan, moves fewer DCN bytes, and the
+compressed mode reports ``compressed_bytes_saved > 0``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DataRef, PilotDescription, ResourceManager,
+                        Session, TransferCostModel, hpc_stage)
+
+RATIO_FLOOR = 1.3        # prefetch must beat sync by this (makespan)
+
+
+def make_work(compute_s: float, out_elems: int):
+    def work(mesh=None, **inputs):
+        time.sleep(compute_s)
+        return jnp.ones((out_elems,), jnp.float32)
+    return work
+
+
+def build_session(*, dcn_cost: float, cache_bytes: Optional[int] = None
+                  ) -> Session:
+    """Three pilots over aliased devices: ``src`` homes the datasets,
+    ``wrk``/``wrk2`` run the compute (DCN between them, simulated)."""
+    rm = ResourceManager(devices=jax.devices() * 6)
+    cm = TransferCostModel(dcn_cost_per_byte=dcn_cost,
+                           gfs_cost_per_byte=dcn_cost / 8,
+                           simulate_time=True)
+    s = Session(rm, cost_model=cm)
+    for name in ("src", "wrk", "wrk2"):
+        s.add_pilot(PilotDescription(
+            n_chips=2, name=name, enable_speculation=False,
+            staging_delay_rounds=500,   # hold for the transfer, not a guess
+            replica_cache_bytes=cache_bytes))
+    return s
+
+
+def run_trial(mode: str, *, n_chain: int = 5, n_repeat: int = 4,
+              elems: int = 64 * 1024, compute_s: float = 0.04,
+              dcn_cost: float = 2.5e-7) -> Dict:
+    """One full DAG run under ``mode`` in {sync, prefetch,
+    prefetch+compress}; a fresh Session (fresh DataPlane/ledger) per
+    trial so byte accounting is per-mode."""
+    s = build_session(dcn_cost=dcn_cost)
+    s.prefetch = mode != "sync"
+    compress = "int8" if mode == "prefetch+compress" else None
+    try:
+        src = s.pilots["src"]
+        x = jnp.ones((elems,), jnp.float32)
+        for i in range(n_chain):
+            s.dataplane.put(f"S{i}", jax.device_put(x), pilot=src.uid)
+        s.dataplane.put("R", jax.device_put(x), pilot=src.uid)
+
+        work = make_work(compute_s, 256)
+        stages = []
+        for i in range(n_chain):
+            stages.append(hpc_stage(
+                f"c{i}", work, inputs=(f"S{i}",), pilot="wrk", n_chips=1,
+                after=(f"c{i-1}",) if i else (),
+                stage_in=(DataRef(f"S{i}", compress=compress),),
+                # last chain stage publishes + spools to the GFS archive
+                **({"outputs": ("chain_out",),
+                    "stage_out": ("chain_out",)}
+                   if i == n_chain - 1 else {})))
+        prev = f"c{n_chain - 1}"
+        for j in range(n_repeat):
+            stages.append(hpc_stage(
+                f"r{j}", work, inputs=("R",), n_chips=1,
+                pilot="wrk" if j % 2 == 0 else "wrk2",
+                after=(prev,),
+                stage_in=(DataRef("R", compress=compress),)))
+            prev = f"r{j}"
+
+        t0 = time.monotonic()
+        s.run(stages, timeout=300)
+        wall = time.monotonic() - t0
+
+        ledger = s.dataplane.ledger()
+        cache_hits = sum(p.prefetcher.cache.stats["hits"]
+                         for p in s.pilots.values()
+                         if p.prefetcher is not None)
+        return {
+            "mode": mode,
+            "n_stages": n_chain + n_repeat,
+            "wall_s": wall,
+            "dcn_bytes": ledger["by_link"]["dcn"],
+            "gfs_bytes": ledger["by_link"]["gfs"],
+            "compressed_bytes_saved": ledger["compressed_bytes_saved"],
+            "cache_hits": cache_hits,
+        }
+    finally:
+        s.shutdown()
+
+
+def sweep(**kw) -> List[Dict]:
+    return [run_trial(m, **kw)
+            for m in ("sync", "prefetch", "prefetch+compress")]
+
+
+def speedup(results: List[Dict], mode: str = "prefetch") -> Optional[float]:
+    by = {r["mode"]: r for r in results}
+    sync, pf = by.get("sync"), by.get(mode)
+    if sync is None or pf is None:
+        return None
+    return sync["wall_s"] / max(pf["wall_s"], 1e-9)
+
+
+def check(results: List[Dict]) -> List[str]:
+    """Smoke-mode acceptance: returns failure strings (empty = pass)."""
+    by = {r["mode"]: r for r in results}
+    fails = []
+    ratio = speedup(results)
+    if ratio is not None and ratio < RATIO_FLOOR:
+        fails.append(f"prefetch only {ratio:.2f}x sync "
+                     f"(floor {RATIO_FLOOR}x)")
+    if by["prefetch"]["dcn_bytes"] >= by["sync"]["dcn_bytes"]:
+        fails.append("replica cache did not cut repeat-read DCN bytes "
+                     f"({by['prefetch']['dcn_bytes']} >= "
+                     f"{by['sync']['dcn_bytes']})")
+    if by["prefetch+compress"]["compressed_bytes_saved"] <= 0:
+        fails.append("compressed mode saved no wire bytes")
+    return fails
+
+
+def run(smoke: bool = True) -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'staging')."""
+    results = sweep() if smoke else sweep(n_chain=8, n_repeat=6)
+    rows = []
+    for r in results:
+        rows.append({
+            "name": f"staging/{r['mode']}",
+            "us_per_call": r["wall_s"] / r["n_stages"] * 1e6,
+            "derived": (f"wall_s={r['wall_s']:.3f} "
+                        f"dcn_mb={r['dcn_bytes'] / 1e6:.2f} "
+                        f"cache_hits={r['cache_hits']} "
+                        f"saved_mb="
+                        f"{r['compressed_bytes_saved'] / 1e6:.2f}")})
+    ratio = speedup(results)
+    if ratio is not None:
+        rows.append({"name": "staging/speedup",
+                     "us_per_call": 0.0,
+                     "derived": f"prefetch_vs_sync={ratio:.2f}x"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: write --json (default "
+                         "BENCH_staging.json) and fail below the "
+                         f"{RATIO_FLOOR}x makespan floor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (implied by --smoke)")
+    ap.add_argument("--chain", type=int, default=None,
+                    help="chain length (default: 5 smoke / 8 full)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="ping-pong tail length (default: 4 smoke / 6 full)")
+    args = ap.parse_args()
+
+    kw = {}
+    if args.chain is not None:
+        kw["n_chain"] = args.chain
+    if args.repeats is not None:
+        kw["n_repeat"] = args.repeats
+    if not args.smoke:
+        kw.setdefault("n_chain", 8)
+        kw.setdefault("n_repeat", 6)
+    results = sweep(**kw)
+
+    hdr = (f"{'mode':>18} {'wall_s':>8} {'dcn_MB':>8} {'gfs_MB':>8} "
+           f"{'hits':>5} {'saved_MB':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in results:
+        print(f"{r['mode']:>18} {r['wall_s']:>8.3f} "
+              f"{r['dcn_bytes'] / 1e6:>8.2f} {r['gfs_bytes'] / 1e6:>8.2f} "
+              f"{r['cache_hits']:>5d} "
+              f"{r['compressed_bytes_saved'] / 1e6:>9.2f}")
+
+    ratio = speedup(results)
+    if ratio is not None:
+        print(f"\nprefetch vs sync makespan: {ratio:.2f}x "
+              f"(floor {RATIO_FLOOR}x)")
+
+    json_path = args.json or ("BENCH_staging.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": results,
+                       "speedup": ratio,
+                       "ratio_floor": RATIO_FLOOR}, f, indent=2)
+        print(f"wrote {json_path}")
+
+    if args.smoke:
+        fails = check(results)
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        if fails:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.
   elastic   — static split vs ControlPlane rebalancing (makespan, moved B)
   fairshare — 3 tenants at 6:1:1 load: FIFO vs DRF vs Capacity policies
   dispatch  — Raptor overlay vs per-CU scheduler dispatch throughput
+  staging   — async prefetch + replica cache vs synchronous staging
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
@@ -21,12 +22,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
-                             "fairshare", "dispatch", "kernels", "roofline"])
+                             "fairshare", "dispatch", "staging", "kernels",
+                             "roofline"])
     args = ap.parse_args()
 
     from benchmarks import (bench_dispatch, bench_elastic, bench_fairshare,
                             bench_kernels, bench_session_placement,
-                            fig5_overheads, fig6_kmeans, roofline_table)
+                            bench_staging, fig5_overheads, fig6_kmeans,
+                            roofline_table)
     sections = {
         "fig5": fig5_overheads.run,
         "fig6": fig6_kmeans.run,
@@ -34,6 +37,7 @@ def main() -> None:
         "elastic": bench_elastic.run,
         "fairshare": bench_fairshare.run,
         "dispatch": bench_dispatch.run,
+        "staging": bench_staging.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,
     }

@@ -11,8 +11,8 @@ elastic resize.  See DESIGN.md for the full architecture map.
 """
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState  # noqa: F401
 from .control_plane import ControlPlane, RebalanceEvent  # noqa: F401
-from .dataplane import (DataPlane, Lineage, Link, PilotData,  # noqa: F401
-                        PilotDataRegistry, TransferCostModel)
+from .dataplane import (DataPlane, GFS_ARCHIVE, Lineage, Link,  # noqa: F401
+                        PilotData, PilotDataRegistry, TransferCostModel)
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401
 from .queues import (CapacityPolicy, DrfPolicy, FifoPolicy,  # noqa: F401
                      QueueConfig, QueueTree, SchedulingPolicy, make_policy)
@@ -21,5 +21,7 @@ from .resource_manager import ResourceManager  # noqa: F401
 from .scheduler import YarnStyleScheduler  # noqa: F401
 from .session import (Session, Stage, TenantContext,  # noqa: F401
                       analytics_stage, hpc_stage)
+from .staging import (DataRef, Prefetcher, ReplicaCache,  # noqa: F401
+                      StageRequest, StageState)
 from .unit_manager import UnitManager  # noqa: F401
 from . import modes  # noqa: F401

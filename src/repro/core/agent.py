@@ -55,6 +55,8 @@ class Agent:
             self.lrm.devices, self.lrm.hbm_per_chip, pilot.data,
             reuse_app_master=reuse_app_master,
             app_master_overhead_s=app_master_overhead_s,
+            staging_delay_rounds=getattr(pilot.desc,
+                                         "staging_delay_rounds", 8),
             policy=getattr(pilot.desc, "scheduler_policy", "fifo"),
             queues=getattr(pilot.desc, "queues", None))
         # sized past the slot count so an elastic grow (absorbed devices)
@@ -97,8 +99,21 @@ class Agent:
         self._pool.shutdown(wait=False, cancel_futures=True)
 
     # -------------------------------------------------------------- submit
-    def submit(self, desc: ComputeUnitDescription) -> ComputeUnit:
+    def submit(self, desc: ComputeUnitDescription, *,
+               staging: Optional[Sequence] = None) -> ComputeUnit:
         cu = ComputeUnit(desc)
+        # stage-in futures must attach BEFORE the CU becomes visible to
+        # a scheduling round, or delay scheduling never sees them.
+        # ``staging`` carries requests the Session already issued at
+        # placement-decision time; otherwise desc.stage_in is enqueued
+        # here (the direct pilot.submit path).
+        prefetcher = getattr(self.pilot, "prefetcher", None)
+        if staging is not None:
+            cu.staging_futures = list(staging)
+        elif desc.stage_in and prefetcher is not None:
+            cu.staging_futures = prefetcher.request_many(
+                desc.stage_in, priority=desc.priority,
+                reason=f"stage-in:{cu.uid}")
         # queue routing can reject (ACL violation, unknown queue on a
         # declared-queue pilot) — register only after it succeeds so a
         # rejected submit does not leave a zombie CU in the table
@@ -115,6 +130,13 @@ class Agent:
         (``scheduler.submit_many``), with a single agent wake at the
         end.  All-or-nothing: a routing rejection admits no CU."""
         cus = [ComputeUnit(d) for d in descs]
+        prefetcher = getattr(self.pilot, "prefetcher", None)
+        if prefetcher is not None:
+            for cu in cus:
+                if cu.desc.stage_in:
+                    cu.staging_futures = prefetcher.request_many(
+                        cu.desc.stage_in, priority=cu.desc.priority,
+                        reason=f"stage-in:{cu.uid}")
         self.scheduler.submit_many(cus)
         with self._lock:
             for cu in cus:
@@ -184,7 +206,10 @@ class Agent:
         # keeps polling idle pilots; beats must not cost lock traffic).
         version = self.scheduler.version()
         overlays = self.overlays()
+        prefetcher = getattr(self.pilot, "prefetcher", None)
+        staging_active = prefetcher is not None and prefetcher.active
         if (not force and self.status and not overlays
+                and not staging_active
                 and version == self._status_version):
             self.status["t"] = now
             return
@@ -211,6 +236,11 @@ class Agent:
             # overlay pressure (pending depth, EMA micro-task runtimes,
             # backlog-per-worker) for ControlPlane.scale_overlays
             "overlays": {m.uid: m.snapshot() for m in overlays},
+            # staging backlog + LRU cache stats — the ControlPlane folds
+            # the backlog into pressure_of so a pilot drowning in
+            # transfers is not also handed more work
+            "staging": (prefetcher.snapshot()
+                        if prefetcher is not None else {}),
         }
 
     def heartbeat(self) -> Dict[str, Any]:
@@ -303,6 +333,14 @@ class Agent:
             self.scheduler.release(cu, gen=gen)
             self._wake.set()
             return
+        # delay budget expired with transfers still in flight: convert any
+        # unclaimed stage-in to a remote read (exactly one side wins the
+        # PENDING->REMOTE vs PENDING->IN_FLIGHT race; a transfer already
+        # claimed by a worker just finishes and the bytes stay promoted)
+        prefetcher = getattr(self.pilot, "prefetcher", None)
+        if prefetcher is not None:
+            for req in cu.staging_futures:
+                prefetcher.claim_remote(req)
         cu._set_state(CUState.RUNNING)
         try:
             kwargs = dict(cu.desc.kwargs)
@@ -318,6 +356,13 @@ class Agent:
             cu._set_state(CUState.DONE)
             self._record_runtime(cu)
             self._resolve_speculation(cu)
+            # stage-out rides the same pipeline, off the critical path:
+            # the CU is DONE before the spool to GFS even starts
+            if prefetcher is not None and cu.desc.stage_out:
+                prefetcher.request_many(
+                    cu.desc.stage_out, kind="out",
+                    priority=cu.desc.priority,
+                    reason=f"stage-out:{cu.uid}")
         except BaseException as e:  # noqa: BLE001 — agent must survive any CU
             if cu.done or cu.state is CUState.CANCELED:
                 return

@@ -45,6 +45,12 @@ class ComputeUnitDescription:
     needs_mesh: bool = True            # pass the assigned sub-mesh as kwarg
     tenant: Optional[str] = None       # submitting tenant (queue ACL subject)
     queue: Optional[str] = None        # tenant queue (default: tenant name)
+    # declarative staging directives (RADICAL-Pilot's per-task
+    # stage_in/stage_out): DataRefs (or plain names) the prefetcher
+    # promotes onto this CU's pilot before it runs / spools out after.
+    # The scheduler delay-schedules a CU whose stage_in is in flight.
+    stage_in: Sequence[Any] = ()
+    stage_out: Sequence[Any] = ()
 
 
 class ComputeUnit:
@@ -58,6 +64,10 @@ class ComputeUnit:
         self.retries = 0
         self.speculative_of: Optional[str] = None
         self.timings: Dict[str, float] = {}
+        # in-flight stage-in transfers (StageRequest futures) this CU
+        # waits on — the scheduler holds the CU (bounded delay
+        # scheduling) until they resolve or the delay budget expires
+        self.staging_futures: Sequence[Any] = ()
         self._done = threading.Event()
         self._lock = threading.Lock()
 
@@ -79,6 +89,12 @@ class ComputeUnit:
     @property
     def done(self) -> bool:
         return self._done.is_set()
+
+    def staging_ready(self) -> bool:
+        """True when no stage-in transfer is still in flight (resolved,
+        failed, or converted to a remote read) — the scheduler's
+        delay-scheduling predicate."""
+        return all(r.done for r in self.staging_futures)
 
     def follow(self, timeout: Optional[float] = None) -> Any:
         """Like :meth:`wait`, but follows re-queue clones: preemption,

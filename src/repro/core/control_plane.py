@@ -57,6 +57,11 @@ class RebalanceEvent:
 
 
 class ControlPlane:
+    # staging backlog -> pressure conversion: each queued/in-flight
+    # transfer counts as a fraction of a chip of demand, so a pilot
+    # drowning in stage-ins is not also handed more work
+    STAGING_BACKLOG_WEIGHT = 0.25
+
     def __init__(self, pm, *, hysteresis: float = 0.5,
                  min_chips: int = 1, max_move_fraction: float = 0.5,
                  min_keep: int = 1,
@@ -81,12 +86,16 @@ class ControlPlane:
         return [p for p in self.pm.pilots
                 if p.agent is not None and p.state.value == "active"]
 
-    @staticmethod
-    def pressure_of(hb: Dict[str, Any]) -> float:
-        """Backlog pressure from one heartbeat: demanded + held chips,
-        normalized by the pilot's live slot count."""
+    @classmethod
+    def pressure_of(cls, hb: Dict[str, Any]) -> float:
+        """Backlog pressure from one heartbeat: demanded + held chips
+        plus a staging-backlog term (in-flight/queued transfers holding
+        CUs under delay scheduling), normalized by the pilot's live
+        slot count."""
         slots = max(hb.get("n_slots", 0), 1)
         demand = hb.get("queued_chip_demand", 0) + hb.get("busy_chips", 0)
+        demand += (cls.STAGING_BACKLOG_WEIGHT
+                   * hb.get("staging", {}).get("backlog", 0))
         return demand / slots
 
     @staticmethod

@@ -26,11 +26,20 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..optim.compression import dequantize_int8, quantize_int8
+
+# pseudo-pilot uid for the global-FS archive tier: a dataset spooled out
+# over the GFS link keeps an archival replica under this home, so pilot
+# caches may evict their copies without it being the "last replica"
+GFS_ARCHIVE = "@gfs"
 
 
 def replicated_sharding(devices: Sequence) -> NamedSharding:
@@ -75,11 +84,21 @@ class TransferCostModel:
     dcn_cost_per_byte: float = 2e-10
     gfs_cost_per_byte: float = 1e-9
     runtime_affinity: float = 2.0
+    # staging benchmarks: when True, every pilot-level move/replicate
+    # sleeps its modeled movement_cost so wall-clock measurements see
+    # transfer time (capped per transfer); default off — scoring-only
+    # callers are unaffected
+    simulate_time: bool = False
+    max_simulated_s: float = 5.0
 
     def cost_per_byte(self, link: str) -> float:
-        return {Link.ICI: self.ici_cost_per_byte,
-                Link.DCN: self.dcn_cost_per_byte,
-                Link.GFS: self.gfs_cost_per_byte}[link]
+        try:
+            return {Link.ICI: self.ici_cost_per_byte,
+                    Link.DCN: self.dcn_cost_per_byte,
+                    Link.GFS: self.gfs_cost_per_byte}[link]
+        except KeyError:
+            raise ValueError(f"unknown link {link!r}; valid links: "
+                             f"{', '.join(Link.ALL)}") from None
 
     def movement_cost(self, nbytes: int, link: str) -> float:
         return nbytes * self.cost_per_byte(link)
@@ -126,6 +145,7 @@ class DataPlane:
         self._moved_bytes = 0
         self._moved_by_link: Dict[str, int] = {l: 0 for l in Link.ALL}
         self._moved_by_reason: Dict[str, int] = {}
+        self._compressed_saved = 0
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------- registry
@@ -166,6 +186,21 @@ class DataPlane:
         """True/False if home tracking knows; None if never attributed."""
         home = self._home.get(name)
         return None if home is None else pilot in home
+
+    def drop_replica(self, name: str, pilot: str, *,
+                     keep_last: bool = True) -> bool:
+        """Forget one pilot's replica of `name` (LRU cache eviction).
+        With ``keep_last`` (the default) the LAST replica is never
+        dropped — eviction must not lose a dataset.  Returns whether
+        the replica was dropped."""
+        with self._lock:
+            home = self._home.get(name)
+            if home is None or pilot not in home:
+                return False
+            if keep_last and not (home - {pilot}):
+                return False
+            home.discard(pilot)
+            return True
 
     def drop_pilot_replicas(self, pilot: str) -> List[str]:
         """A pilot's replicas are gone (failure/shutdown). Returns the
@@ -224,12 +259,21 @@ class DataPlane:
         return moved
 
     # ------------------------------------------------------------- movement
+    def _simulate(self, nbytes: int, link: str) -> None:
+        """Pay the modeled transfer time in wall-clock (benchmarks set
+        ``cost_model.simulate_time``); a no-op otherwise.  Called OUTSIDE
+        the lock — concurrent transfers overlap, as real links would."""
+        if self.cost_model.simulate_time and nbytes:
+            time.sleep(min(self.cost_model.movement_cost(nbytes, link),
+                           self.cost_model.max_simulated_s))
+
     def record_moved(self, nbytes: int, link: str = Link.DCN,
                      reason: str = "") -> None:
         """Public ledger entry: `nbytes` crossed `link`.  The ONLY way
         moved bytes are accounted — callers never touch the counters."""
         if link not in Link.ALL:
-            raise ValueError(f"unknown link {link!r}; use Link.ICI/DCN/GFS")
+            raise ValueError(f"unknown link {link!r}; valid links: "
+                             f"{', '.join(Link.ALL)}")
         with self._lock:
             self._moved_bytes += nbytes
             self._moved_by_link[link] += nbytes
@@ -260,12 +304,75 @@ class DataPlane:
         nonres = self.bytes_nonresident([name], pilot,
                                         list(sharding.device_set))
         moved = jax.device_put(pd.array, sharding)
+        self._simulate(nonres, link)
         with self._lock:
             self._data[name] = PilotData(name, moved)
             self._home[name] = {pilot}
         if nonres:
             self.record_moved(nonres, link, reason or f"move:{name}")
         return moved, nonres
+
+    def replicate_to(self, name: str, pilot: str, sharding, *,
+                     link: str = Link.DCN, reason: str = "",
+                     compress: Optional[str] = None,
+                     min_compress_bytes: int = 1 << 16
+                     ) -> Tuple[jax.Array, int]:
+        """Prefetch-path move: like :meth:`move_to_pilot` but the target
+        pilot is ADDED to the home set — existing replicas survive, so
+        a later reader on the old pilot hits its cached copy instead of
+        ping-ponging the data back (the LRU replica cache's substrate).
+
+        With ``compress="int8"`` and a DCN/GFS transfer of at least
+        ``min_compress_bytes`` non-resident bytes, the payload crosses
+        the wire int8-quantized (:mod:`repro.optim.compression`): the
+        ledger records the COMPRESSED size and the savings accumulate
+        under :attr:`compressed_bytes_saved`.  The landed replica is
+        the dequantized reconstruction (lossy by one quantization
+        step, like any wire-compressed staging tier).
+        Returns (landed array, bytes recorded on `link`)."""
+        pd = self._data[name]
+        nonres = self.bytes_nonresident([name], pilot,
+                                        list(sharding.device_set))
+        if nonres == 0:
+            with self._lock:
+                self._home.setdefault(name, set()).add(pilot)
+            return pd.array, 0
+        arr = pd.array
+        wire = nonres
+        if (compress == "int8" and link in (Link.DCN, Link.GFS)
+                and nonres >= min_compress_bytes
+                and jnp.issubdtype(arr.dtype, jnp.floating)):
+            q, scale = quantize_int8(arr)
+            q = jax.device_put(q, sharding)
+            moved = dequantize_int8(q, scale).astype(arr.dtype)
+            wire = max(int(nonres * (q.nbytes / max(pd.nbytes, 1))), 1)
+            with self._lock:
+                self._compressed_saved += nonres - wire
+        else:
+            moved = jax.device_put(arr, sharding)
+        self._simulate(wire, link)
+        with self._lock:
+            self._data[name] = PilotData(name, moved)
+            self._home.setdefault(name, set()).add(pilot)
+        self.record_moved(wire, link, reason or f"replicate:{name}")
+        return moved, wire
+
+    def spool_out(self, name: str, *, link: str = Link.GFS,
+                  reason: str = "stage-out") -> int:
+        """Stage-out spool: push a produced dataset over `link` (the
+        HDFS-distcp/Lustre-persist analogue).  A GFS spool leaves an
+        archival replica under :data:`GFS_ARCHIVE`, which makes every
+        pilot copy of the dataset cache-evictable.  Returns the bytes
+        ledgered."""
+        pd = self._data.get(name)
+        if pd is None:
+            raise KeyError(f"cannot stage out unknown dataset {name!r}")
+        self._simulate(pd.nbytes, link)
+        self.record_moved(pd.nbytes, link, reason)
+        if link == Link.GFS:
+            with self._lock:
+                self._home.setdefault(name, set()).add(GFS_ARCHIVE)
+        return pd.nbytes
 
     # ------------------------------------------------------------- eviction
     def datasets_on_devices(self, devices: Sequence,
@@ -322,11 +429,16 @@ class DataPlane:
     def moved_by_link(self, link: str) -> int:
         return self._moved_by_link.get(link, 0)
 
+    @property
+    def compressed_bytes_saved(self) -> int:
+        return self._compressed_saved
+
     def ledger(self) -> Dict[str, Any]:
         with self._lock:
             return {"total": self._moved_bytes,
                     "by_link": dict(self._moved_by_link),
-                    "by_reason": dict(self._moved_by_reason)}
+                    "by_reason": dict(self._moved_by_reason),
+                    "compressed_bytes_saved": self._compressed_saved}
 
 
 # Backwards-compatible name: the seed's single-pilot registry grew into

@@ -54,6 +54,11 @@ class PilotDescription:
     enable_speculation: bool = True
     scheduler_policy: Any = "fifo"    # 'fifo' | 'capacity' | 'drf' | instance
     queues: Optional[Sequence] = None  # QueueConfigs for the tenant queues
+    # tiered staging pipeline (paper: data-staging to/from HDFS around
+    # each Hadoop run; here: async tier promotion GFS->DCN->ICI)
+    prefetch_workers: int = 2          # stage-in/out worker threads
+    staging_delay_rounds: int = 8      # delay-scheduling hold (rounds)
+    replica_cache_bytes: Optional[int] = None  # LRU budget (None: unbounded)
 
 
 class Pilot:
@@ -66,6 +71,7 @@ class Pilot:
         self.devices: List = []
         self.data = data_registry or DataPlane()
         self.agent: Optional[Agent] = None
+        self.prefetcher = None         # staging pipeline, built in start()
         self.timings: Dict[str, float] = {"t_new": time.monotonic()}
         self._lock = threading.Lock()
 
@@ -78,6 +84,13 @@ class Pilot:
                            app_master_overhead_s=self.desc.app_master_overhead_s,
                            n_spawners=self.desc.n_spawners,
                            enable_speculation=self.desc.enable_speculation)
+        # the prefetcher wakes the agent loop on every resolved transfer
+        # so a delay-scheduled CU binds the round its inputs land
+        from .staging import Prefetcher
+        self.prefetcher = Prefetcher(
+            self, self.data, n_workers=self.desc.prefetch_workers,
+            cache_bytes=self.desc.replica_cache_bytes)
+        self.prefetcher.notify = self.agent._wake.set
         self.agent.start()
         self.state = PilotState.ACTIVE
         self.timings["t_active"] = time.monotonic()
@@ -97,9 +110,18 @@ class Pilot:
         return Mesh(arr, axis_names)
 
     # ------------------------------------------------------------ submit
-    def submit(self, cu_desc) -> Any:
+    def submit(self, cu_desc, **kw) -> Any:
         assert self.agent is not None, "pilot not started"
-        return self.agent.submit(cu_desc)
+        return self.agent.submit(cu_desc, **kw)
+
+    def stage_in(self, refs: Sequence, *, priority: int = 0,
+                 reason: str = "stage-in") -> List:
+        """Enqueue async tier promotion of ``refs`` (names or DataRefs)
+        onto this pilot; returns the StageRequest futures.  Pass them to
+        :meth:`submit` as ``staging=`` to delay-schedule a CU on them."""
+        assert self.prefetcher is not None, "pilot not started"
+        return self.prefetcher.request_many(refs, priority=priority,
+                                            reason=reason)
 
     # ------------------------------------------------------------- overlay
     def spawn_raptor(self, n_workers: int, *,
@@ -192,6 +214,8 @@ class Pilot:
                 self.rm.reclaim(self.uid, drop)
 
     def shutdown(self) -> None:
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
         if self.agent is not None:
             self.agent.stop()
         self.rm.release(self.uid)

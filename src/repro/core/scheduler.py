@@ -61,6 +61,7 @@ class YarnStyleScheduler:
                  data_registry: Optional[DataPlane] = None, *,
                  reuse_app_master: bool = True,
                  locality_delay_rounds: int = 3,
+                 staging_delay_rounds: int = 8,
                  app_master_overhead_s: float = 0.0,
                  gang_reservation_rounds: int = 8,
                  policy: Union[str, SchedulingPolicy, None] = "fifo",
@@ -76,6 +77,10 @@ class YarnStyleScheduler:
         self._running: Dict[str, List[int]] = {}
         self._app_masters: Dict[str, int] = {}     # app_id -> device idx
         self._skip_counts: Dict[str, int] = {}
+        # staging delay scheduling: rounds a CU has been held waiting
+        # for its stage_in transfers to land (bounded by
+        # staging_delay_rounds, then it runs with remote reads)
+        self._staging_waits: Dict[str, int] = {}
         # --- elastic device states (disjoint from _free) ---
         self._draining: Set[int] = set()    # no new binds; leaving the pilot
         self._carved: Set[int] = set()      # Mode-I carve-out (will return)
@@ -91,6 +96,7 @@ class YarnStyleScheduler:
         self._gen = itertools.count(1)
         self.reuse_app_master = reuse_app_master
         self.locality_delay_rounds = locality_delay_rounds
+        self.staging_delay_rounds = staging_delay_rounds
         self.app_master_overhead_s = app_master_overhead_s
         self.gang_reservation_rounds = gang_reservation_rounds
         self.data = data_registry or DataPlane()
@@ -110,7 +116,8 @@ class YarnStyleScheduler:
         self.stats = {"scheduled": 0, "locality_hits": 0, "locality_misses": 0,
                       "app_masters_started": 0, "app_masters_reused": 0,
                       "gang_reservations": 0, "carved_out": 0, "drained": 0,
-                      "batch_submits": 0, "micro_charged": 0}
+                      "batch_submits": 0, "micro_charged": 0,
+                      "staging_delayed": 0, "staging_expired": 0}
 
     # ------------------------------------------------------- event plumbing
     def _bump(self) -> None:
@@ -258,6 +265,7 @@ class YarnStyleScheduler:
         self._running[cu.uid] = cand
         self._bound_gen[cu.uid] = next(self._gen)
         self._gang_waits.pop(cu.uid, None)
+        self._staging_waits.pop(cu.uid, None)
         if cu.desc.gang:
             self._running_gangs[cu.uid] = cu.desc.n_chips
         hbm_total = mem_per * cu.desc.n_chips
@@ -343,6 +351,7 @@ class YarnStyleScheduler:
                 if cu.state is CUState.CANCELED:
                     q.remove(entry)
                     dirty = True
+                    self._staging_waits.pop(cu.uid, None)
                     if self._gang_res_uid == cu.uid:
                         self._clear_gang_reservation()
                     continue
@@ -353,6 +362,7 @@ class YarnStyleScheduler:
                     cu._set_state(CUState.FAILED)
                     q.remove(entry)
                     dirty = True
+                    self._staging_waits.pop(cu.uid, None)
                     continue
                 hbm_req = mem_per_chip(cu.desc.memory_bytes,
                                        cu.desc.n_chips) * cu.desc.n_chips
@@ -370,7 +380,23 @@ class YarnStyleScheduler:
                     cu._set_state(CUState.FAILED)
                     q.remove(entry)
                     dirty = True
+                    self._staging_waits.pop(cu.uid, None)
                     continue
+                # staging delay scheduling: a CU whose stage_in is still
+                # in flight waits up to staging_delay_rounds for the hot
+                # replica to land (prefetch completion wakes the agent
+                # immediately), then runs anyway with remote reads — the
+                # non-resident bytes get ledgered by the agent's
+                # claim_remote fallback, exactly as a synchronous move
+                # would have been.  The bound is per-CU and hard: no CU
+                # ever waits more than staging_delay_rounds rounds here.
+                if not cu.staging_ready():
+                    waits = self._staging_waits.get(cu.uid, 0)
+                    if waits < self.staging_delay_rounds:
+                        self._staging_waits[cu.uid] = waits + 1
+                        self.stats["staging_delayed"] += 1
+                        continue
+                    self.stats["staging_expired"] += 1
                 # a CU over its queue's max share stays queued; a capped
                 # gang does not age a reservation either — parked chips
                 # could never be offered to it anyway

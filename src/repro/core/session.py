@@ -44,6 +44,7 @@ from .dataplane import (DataPlane, Lineage, Link, TransferCostModel,
                         replicated_sharding)
 from .pilot import Pilot, PilotDescription, PilotManager
 from .resource_manager import ResourceManager
+from .staging import DataRef, as_refs
 
 HPC = "hpc"
 ANALYTICS = "analytics"
@@ -72,6 +73,12 @@ class Stage:
     gang: bool = True
     tenant: Optional[str] = None        # submitting tenant (set by contexts)
     queue: Optional[str] = None         # tenant queue for the stage's CUs
+    # declarative staging overrides: DataRefs refining how ``inputs``
+    # are promoted (link hint, wire compression) and which outputs are
+    # spooled out after the stage (GFS archive).  Names not in
+    # ``inputs`` are staged in addition.
+    stage_in: Tuple = ()
+    stage_out: Tuple = ()
 
 
 def hpc_stage(name: str, fn: Callable, **kw) -> Stage:
@@ -131,9 +138,14 @@ class TenantContext:
 
 class Session:
     def __init__(self, rm: Optional[ResourceManager] = None, *,
-                 cost_model: Optional[TransferCostModel] = None):
+                 cost_model: Optional[TransferCostModel] = None,
+                 prefetch: bool = False):
         self.cost_model = cost_model or TransferCostModel()
         self.dataplane = DataPlane(cost_model=self.cost_model)
+        # prefetch=True routes stage inputs through each pilot's async
+        # staging pipeline (placement-time enqueue, delay scheduling)
+        # instead of the synchronous move in _ensure_inputs_on
+        self.prefetch = prefetch
         self.pm = PilotManager(rm)
         self.control_plane = self.pm.control_plane  # elastic rebalancing
         self.pilots: Dict[str, Pilot] = {}          # pilot name -> Pilot
@@ -143,6 +155,7 @@ class Session:
         self._engines: Dict[str, Any] = {}          # pilot uid -> engine
         self._tenants: Dict[str, TenantContext] = {}
         self._overlays: Dict[str, Any] = {}         # pilot uid -> RaptorMaster
+        self._pre_staged: Dict[str, Tuple] = {}     # stage -> (pilot, dec, reqs)
         self._lock = threading.Lock()
         self._move_lock = threading.Lock()          # serializes input moves
 
@@ -345,6 +358,8 @@ class Session:
         with self._lock:
             for s in ordered:
                 self._stages[s.name] = s
+        if self.prefetch:
+            self._pre_stage(ordered)
         ex = ThreadPoolExecutor(max_workers=max(4, len(ordered)),
                                 thread_name_prefix="session-stage")
         futures: Dict[str, Future] = {}
@@ -359,6 +374,51 @@ class Session:
         """Execute the DAG to completion; returns stage name -> result."""
         futures = self.submit_dag(stages, timeout=timeout)
         return {name: f.result(timeout) for name, f in futures.items()}
+
+    # ------------------------------------------------------------- staging
+    def _stage_in_refs(self, stage: Stage) -> List[DataRef]:
+        """The stage's effective stage-in set: every declared input as a
+        plain DataRef, refined (link hint / compression) by any matching
+        ``stage.stage_in`` entry; stage_in names outside ``inputs`` are
+        staged in addition."""
+        by_name = {r.name: r for r in as_refs(stage.stage_in)}
+        refs = [by_name.pop(n, DataRef(n)) for n in stage.inputs]
+        return refs + list(by_name.values())
+
+    def _prefetch_for(self, stage: Stage, pilot: Pilot) -> List:
+        """Enqueue async tier promotion of the stage's inputs onto the
+        chosen pilot (placement-decision time) — transfers overlap
+        whatever is still running there."""
+        refs = self._stage_in_refs(stage)
+        for r in refs:
+            if r.name not in self.dataplane:
+                raise KeyError(f"stage {stage.name!r} input {r.name!r} "
+                               "not in DataPlane")
+        if pilot.prefetcher is None:
+            return []
+        return pilot.prefetcher.request_many(
+            refs, reason=f"stage:{stage.name}")
+
+    def _pre_stage(self, ordered: Sequence[Stage]) -> None:
+        """Eager placement + prefetch for stages whose inputs all exist
+        already (none produced by this DAG): their transfers start at
+        submit time, overlapping the predecessors ``after`` chains them
+        behind.  The placement decision is stashed and consumed by
+        :meth:`_run_stage` when the stage's turn comes."""
+        produced = {out for s in ordered for out in s.outputs}
+        for s in ordered:
+            if not s.inputs or any(i in produced for i in s.inputs):
+                continue
+            if not all(i in self.dataplane for i in s.inputs):
+                continue
+            try:
+                pilot, decision = self.place(s)
+            except RuntimeError:
+                continue          # no compatible pilot: fail at run time
+            reqs = self._prefetch_for(s, pilot)
+            decision["pre_staged"] = True
+            with self._lock:
+                self._pre_staged[s.name] = (pilot, decision, reqs)
 
     # ------------------------------------------------------------ execution
     def _run_stage(self, stage: Stage, dep_futs: Sequence[Future],
@@ -375,21 +435,41 @@ class Session:
                     f"({ctx.max_concurrent_stages}) not freed within "
                     f"{timeout}s for stage {stage.name!r}")
         try:
-            pilot, decision = self.place(stage)
+            with self._lock:
+                pre = self._pre_staged.pop(stage.name, None)
+            if pre is not None:
+                pilot, decision, staging = pre
+            else:
+                pilot, decision = self.place(stage)
+                staging = (self._prefetch_for(stage, pilot)
+                           if self.prefetch else None)
             if stage.tenant:
                 decision["tenant"] = stage.tenant
                 decision["queue"] = stage.queue
-            self._ensure_inputs_on(stage, pilot, decision)
+            if staging is None:
+                self._ensure_inputs_on(stage, pilot, decision)
             if stage.kind == HPC:
-                result = self._run_hpc(stage, pilot, timeout)
+                result = self._run_hpc(stage, pilot, timeout,
+                                       staging=staging)
             else:
-                result = self._run_analytics(stage, pilot, decision, timeout)
+                result = self._run_analytics(stage, pilot, decision, timeout,
+                                             staging=staging)
+            if staging is not None:
+                decision["dcn_bytes_moved"] = sum(r.wire_bytes
+                                                  for r in staging)
+                decision["staging_hits"] = sum(1 for r in staging if r.hit)
         finally:
             if ctx is not None and ctx._sem is not None:
                 ctx._sem.release()
         if ctx is not None:
             ctx.stats["completed"] += 1
         self._store_outputs(stage, pilot, result)
+        if stage.stage_out and pilot.prefetcher is not None:
+            # spool declared outputs to the GFS archive tier — off the
+            # critical path; the stage result is already published
+            pilot.prefetcher.request_many(
+                stage.stage_out, kind="out",
+                reason=f"stage-out:{stage.name}")
         with self._lock:
             self.results[stage.name] = result
             self.placements[stage.name] = decision
@@ -435,7 +515,8 @@ class Session:
         return (f"session:{stage.kind}"
                 + (f":{stage.tenant}" if stage.tenant else ""))
 
-    def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float) -> Any:
+    def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float,
+                 staging: Optional[Sequence] = None) -> Any:
         # whole-pilot stages size to the scheduler's LIVE slot count, not
         # len(devices): chips draining away are still in the device list
         # but a gang that counts them would fail fast
@@ -447,13 +528,14 @@ class Session:
         cu = pilot.submit(ComputeUnitDescription(
             fn=job, gang=stage.gang, n_chips=n, tag=f"stage:{stage.name}",
             data=tuple(stage.inputs), app_id=self._app_id(stage),
-            tenant=stage.tenant, queue=stage.queue))
+            tenant=stage.tenant, queue=stage.queue), staging=staging)
         # follow(): a ControlPlane drain may preempt the CU and forward
         # to a re-queued clone — the stage result is the chain's end
         return cu.follow(timeout)
 
     def _run_analytics(self, stage: Stage, pilot: Pilot,
-                       decision: Dict[str, Any], timeout: float) -> Any:
+                       decision: Dict[str, Any], timeout: float,
+                       staging: Optional[Sequence] = None) -> Any:
         if pilot.desc.runtime == ANALYTICS:
             engine = self._engine_for(pilot)
             decision["mode"] = "native"
@@ -467,10 +549,15 @@ class Session:
                 or max(pilot.agent.scheduler.n_slots, 1),
                 tag=f"stage:{stage.name}", data=tuple(stage.inputs),
                 needs_mesh=False, app_id=self._app_id(stage),
-                tenant=stage.tenant, queue=stage.queue))
+                tenant=stage.tenant, queue=stage.queue), staging=staging)
             return cu.follow(timeout)
         # Mode I: carve an on-demand analytics cluster out of the HPC
-        # pilot holding the data (compute goes to the data).
+        # pilot holding the data (compute goes to the data).  The carve
+        # path has no CU to delay-schedule, so in-flight staging is
+        # awaited here (the transfers still overlapped the predecessor).
+        if staging:
+            for r in staging:
+                r.wait(timeout)
         decision["mode"] = "mode1-carve"
         n = stage.n_chips or len(pilot.devices)
         cluster = pilot.spawn_analytics_cluster(n, tenant=stage.tenant,

@@ -1,0 +1,351 @@
+"""Tiered data staging: prefetch pipeline, delay scheduling, LRU
+replica cache, remote-read fallback, wire compression, and the
+ControlPlane's staging-pressure term."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeUnitDescription, DataRef, PilotDescription,
+                        PilotManager, ResourceManager, Session, StageRequest,
+                        StageState, TransferCostModel, hpc_stage)
+from repro.core.compute_unit import ComputeUnit
+from repro.core.control_plane import ControlPlane
+from repro.core.dataplane import (DataPlane, GFS_ARCHIVE, Link,
+                                  replicated_sharding)
+from repro.core.scheduler import YarnStyleScheduler
+from repro.core.staging import ReplicaCache
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.i = i
+        self.platform = "fake"
+
+
+def make_sched(n=4, hbm=16, **kw):
+    kw.setdefault("locality_delay_rounds", 0)
+    return YarnStyleScheduler([FakeDevice(i) for i in range(n)], hbm, **kw)
+
+
+def cu_with_staging(reqs, n_chips=1):
+    cu = ComputeUnit(ComputeUnitDescription(fn=lambda: None,
+                                            n_chips=n_chips))
+    cu.staging_futures = list(reqs)
+    return cu
+
+
+def make_pilots(n_pilots=2, n_chips=2, **desc_kw):
+    rm = ResourceManager(devices=jax.devices() * (n_pilots * n_chips))
+    shared = DataPlane()
+    pm = PilotManager(rm)
+    pilots = [pm.submit(PilotDescription(n_chips=n_chips, name=f"p{i}",
+                                         enable_speculation=False,
+                                         **desc_kw),
+                        data_registry=shared)
+              for i in range(n_pilots)]
+    return pm, shared, pilots
+
+
+def put_on(data, name, pilot, elems=1024):
+    arr = jax.device_put(jnp.ones((elems,), jnp.float32),
+                         replicated_sharding(pilot.devices))
+    data.put(name, arr, pilot=pilot.uid)
+    return arr
+
+
+# ------------------------------------------------------- delay scheduling
+def test_delay_scheduling_is_bounded():
+    """A CU with an unresolved stage-in is held for exactly
+    staging_delay_rounds rounds, then admitted anyway."""
+    sched = make_sched(2, staging_delay_rounds=3)
+    req = StageRequest(DataRef("x"))          # never resolves
+    cu = cu_with_staging([req])
+    sched.submit(cu)
+    for _ in range(3):
+        assert sched.schedule_round() == []   # held
+    bound = sched.schedule_round()            # budget expired: runs
+    assert [b[0] for b in bound] == [cu]
+    assert sched.stats["staging_delayed"] == 3
+    assert sched.stats["staging_expired"] == 1
+
+
+def test_delay_scheduling_binds_early_when_staging_lands():
+    sched = make_sched(2, staging_delay_rounds=100)
+    req = StageRequest(DataRef("x"))
+    cu = cu_with_staging([req])
+    sched.submit(cu)
+    assert sched.schedule_round() == []
+    req._resolve(StageState.DONE, 0)          # transfer landed
+    bound = sched.schedule_round()
+    assert [b[0] for b in bound] == [cu]
+    assert sched.stats["staging_expired"] == 0
+
+
+def test_staging_does_not_block_other_cus():
+    """Delay scheduling holds only the staging CU; ready CUs behind it
+    still bind (it is a skip, not a barrier)."""
+    sched = make_sched(2, staging_delay_rounds=100)
+    waiting = cu_with_staging([StageRequest(DataRef("x"))])
+    ready = cu_with_staging([])
+    sched.submit(waiting)
+    sched.submit(ready)
+    bound = sched.schedule_round()
+    assert [b[0] for b in bound] == [ready]
+
+
+# ------------------------------------------------------------- LRU cache
+def test_lru_cache_never_drops_last_replica():
+    pm, data, (p0,) = make_pilots(n_pilots=1)
+    try:
+        put_on(data, "only", p0)              # single replica, on p0
+        cache = ReplicaCache(p0.uid, data, budget_bytes=1)
+        cache.admit("only", data.get("only").nbytes)
+        # over budget but unevictable: nothing to evict but itself
+        cache.admit("other", 10**9)           # forces an eviction walk
+        assert "only" in data                  # dataset survived
+        assert data.resident_on("only", p0.uid)
+        assert cache.stats["evictions"] == 0 or "only" in cache
+    finally:
+        pm.shutdown()
+
+
+def test_lru_cache_evicts_in_recency_order_within_budget():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        nbytes = 1024 * 4
+        for name in ("a", "b", "c"):
+            put_on(data, name, p0)            # home: p0 (evictable on p1)
+            data.replicate_to(name, p1.uid,
+                              replicated_sharding(p1.devices))
+        cache = ReplicaCache(p1.uid, data, budget_bytes=2 * nbytes)
+        cache.admit("a", nbytes)
+        cache.admit("b", nbytes)
+        cache.touch("a")                      # b is now LRU
+        evicted = cache.admit("c", nbytes)
+        assert evicted == ["b"]
+        assert not data.resident_on("b", p1.uid)   # replica dropped
+        assert data.resident_on("b", p0.uid)       # lineage home intact
+        assert cache.bytes_cached == 2 * nbytes
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------------ prefetcher
+def test_prefetch_transfers_and_ledgers():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "x", p0)
+        (req,) = p1.stage_in(["x"])
+        assert req.wait(10.0) == data.get("x").nbytes
+        assert req.state is StageState.DONE
+        assert data.resident_on("x", p1.uid)
+        assert data.resident_on("x", p0.uid)   # replica ADDED, not moved
+        assert data.moved_by_link(Link.DCN) == data.get("x").nbytes
+    finally:
+        pm.shutdown()
+
+
+def test_prefetch_hit_skips_transfer_and_ledger():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "x", p1)                 # already resident on p1
+        (req,) = p1.stage_in(["x"])
+        assert req.wait(10.0) == 0
+        assert req.hit
+        assert p1.prefetcher.cache.stats["hits"] == 1
+        assert data.moved_by_link(Link.DCN) == 0
+    finally:
+        pm.shutdown()
+
+
+def test_duplicate_requests_coalesce_to_one_transfer():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "x", p0)
+        reqs = p1.stage_in(["x", "x", "x"])
+        for r in reqs:
+            r.wait(10.0)
+        snap = p1.prefetcher.snapshot()
+        assert snap["transfers"] == 1
+        assert snap["cache"]["hits"] == 2
+        assert data.moved_by_link(Link.DCN) == data.get("x").nbytes
+    finally:
+        pm.shutdown()
+
+
+def test_remote_read_claim_ledgers_and_resolves():
+    """claim_remote on a PENDING request ledgers the non-resident bytes
+    (the CU ran with remote reads) and wins the race exactly once."""
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "x", p0)
+        req = StageRequest(DataRef("x"))      # never enqueued: stays PENDING
+        assert p1.prefetcher.claim_remote(req)
+        assert req.state is StageState.REMOTE
+        assert req.done
+        assert data.moved_by_link(Link.DCN) == data.get("x").nbytes
+        assert not p1.prefetcher.claim_remote(req)   # second claim loses
+        assert data.moved_by_link(Link.DCN) == data.get("x").nbytes
+    finally:
+        pm.shutdown()
+
+
+def test_stage_out_spools_to_gfs_archive():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "out", p0)
+        (req,) = p0.prefetcher.request_many(["out"], kind="out")
+        nbytes = req.wait(10.0)
+        assert nbytes == data.get("out").nbytes
+        assert data.moved_by_link(Link.GFS) == nbytes
+        assert data.resident_on("out", GFS_ARCHIVE)   # archive copy noted
+        assert data.resident_on("out", p0.uid)        # pilot copy kept
+    finally:
+        pm.shutdown()
+
+
+def test_stage_in_via_cu_description_and_heartbeat_export():
+    """desc.stage_in flows through Agent.submit; the heartbeat exports
+    the staging snapshot the ControlPlane reads."""
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        put_on(data, "x", p0)
+        cu = p1.submit(ComputeUnitDescription(
+            fn=lambda: 42, n_chips=1, needs_mesh=False,
+            stage_in=("x",)))
+        assert cu.wait(30.0) == 42
+        for r in cu.staging_futures:
+            assert r.done
+        assert data.resident_on("x", p1.uid)
+        hb = p1.agent.heartbeat()
+        assert hb["staging"]["requests"] == 1
+        assert hb["staging"]["backlog"] == 0
+    finally:
+        pm.shutdown()
+
+
+def test_pressure_folds_staging_backlog():
+    hb = {"n_slots": 4, "queued_chip_demand": 0, "busy_chips": 0,
+          "staging": {"backlog": 8}}
+    base = dict(hb, staging={"backlog": 0})
+    assert ControlPlane.pressure_of(hb) > ControlPlane.pressure_of(base)
+    assert ControlPlane.pressure_of(hb) == pytest.approx(
+        ControlPlane.STAGING_BACKLOG_WEIGHT * 8 / 4)
+
+
+# ------------------------------------------------------- wire compression
+def test_compressed_replicate_ledgers_quarter_bytes():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        arr = put_on(data, "big", p0, elems=64 * 1024)   # 256 KiB float32
+        (req,) = p1.stage_in([DataRef("big", compress="int8")])
+        wire = req.wait(10.0)
+        assert wire == pytest.approx(arr.nbytes / 4, rel=0.01)
+        assert data.compressed_bytes_saved == arr.nbytes - wire
+        assert data.moved_by_link(Link.DCN) == wire
+        # the landed replica is a dequantized float32 of the original
+        landed = np.asarray(data.get("big").array)
+        np.testing.assert_allclose(landed, np.ones_like(landed), atol=0.01)
+    finally:
+        pm.shutdown()
+
+
+def test_small_transfers_skip_compression():
+    pm, data, (p0, p1) = make_pilots()
+    try:
+        arr = put_on(data, "small", p0, elems=64)        # far below 64 KiB
+        (req,) = p1.stage_in([DataRef("small", compress="int8")])
+        assert req.wait(10.0) == arr.nbytes              # full-fat wire
+        assert data.compressed_bytes_saved == 0
+    finally:
+        pm.shutdown()
+
+
+# ------------------------------------------------------- link validation
+def test_record_moved_rejects_unknown_link():
+    data = DataPlane()
+    with pytest.raises(ValueError, match="ici.*dcn.*gfs"):
+        data.record_moved(100, "infiniband")
+
+
+def test_cost_model_rejects_unknown_link():
+    with pytest.raises(ValueError, match="valid links"):
+        TransferCostModel().cost_per_byte("nvlink")
+
+
+# --------------------------------------------------------- session E2E
+def test_session_prefetch_dag_end_to_end():
+    """prefetch=True: inputs promoted via the staging pipeline (replica
+    added, bytes on the ledger), placement records staging stats, and a
+    repeat read on the same pilot is a cache hit."""
+    rm = ResourceManager(devices=jax.devices() * 4)
+    s = Session(rm, prefetch=True)
+    src = s.add_pilot(PilotDescription(n_chips=2, name="src",
+                                       enable_speculation=False))
+    wrk = s.add_pilot(PilotDescription(n_chips=2, name="wrk",
+                                       enable_speculation=False,
+                                       staging_delay_rounds=500))
+    try:
+        x = jax.device_put(jnp.ones((2048,), jnp.float32),
+                           replicated_sharding(src.devices))
+        s.dataplane.put("x", x, pilot=src.uid)
+
+        def work(x=None, mesh=None):
+            return float(x.sum())
+
+        out = s.run([
+            hpc_stage("a", work, inputs=("x",), pilot="wrk", n_chips=1),
+            hpc_stage("b", work, inputs=("x",), pilot="wrk", n_chips=1,
+                      after=("a",)),
+        ], timeout=60)
+        assert out["a"] == out["b"] == 2048.0
+        assert s.dataplane.resident_on("x", wrk.uid)
+        assert s.dataplane.resident_on("x", src.uid)    # replica kept
+        # one transfer total; the second stage hit the replica cache
+        assert s.dataplane.moved_by_link(Link.DCN) == x.nbytes
+        assert wrk.prefetcher.cache.stats["hits"] >= 1
+        assert s.placements["a"]["pre_staged"]
+        assert (s.placements["a"]["dcn_bytes_moved"]
+                + s.placements["b"]["dcn_bytes_moved"]) == x.nbytes
+    finally:
+        s.shutdown()
+
+
+def test_session_stage_out_archives_output():
+    rm = ResourceManager(devices=jax.devices() * 2)
+    s = Session(rm, prefetch=True)
+    s.add_pilot(PilotDescription(n_chips=1, name="hpc",
+                                 enable_speculation=False))
+    try:
+        def produce(mesh=None):
+            return jnp.ones((128,), jnp.float32)
+
+        s.run([hpc_stage("p", produce, outputs=("y",),
+                         stage_out=("y",))], timeout=60)
+        deadline = time.monotonic() + 10
+        while (not s.dataplane.resident_on("y", GFS_ARCHIVE)
+               and time.monotonic() < deadline):
+            time.sleep(0.01)                   # spool is off-critical-path
+        assert s.dataplane.resident_on("y", GFS_ARCHIVE)
+        assert s.dataplane.moved_by_link(Link.GFS) == \
+            s.dataplane.get("y").nbytes
+    finally:
+        s.shutdown()
+
+
+def test_prefetcher_stop_fails_queued_requests():
+    pm, data, (p0,) = make_pilots(n_pilots=1)
+    try:
+        put_on(data, "x", p0)
+        p0.prefetcher.stop()
+        req = StageRequest(DataRef("x"))
+        p0.prefetcher._q.put((0, 0, req))
+        p0.prefetcher.stop()
+        with pytest.raises(RuntimeError, match="stopped"):
+            req.wait(1.0)
+    finally:
+        pm.shutdown()

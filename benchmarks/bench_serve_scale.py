@@ -1,0 +1,284 @@
+"""Serving-at-scale benchmark: disaggregated prefill/decode vs a static
+single-pilot engine.
+
+The seed engine did everything on one pilot, with each admission's
+prefill run inline on the decode thread — a long prompt stalled the
+whole batch (exactly the head-of-line blocking the paper's two-cluster
+split avoids).  The disaggregated pool (``Session.serve_pool``) moves
+prefill onto a Raptor overlay on the compute pilot, runs N decode
+engines on separate pilots, pages every request's KV-cache on the
+DataPlane and dispatches by ``locality − movement_cost − load`` with
+fleet-wide per-tenant DRF budgets.
+
+Workload: a 10³-user tier with three tenants — ``flood`` (70%, slot-
+capped), ``med`` (15%, capped) and ``small`` (15%, uncapped) — through
+a modeled-cost backend (``SimBackend``: sleeps, not FLOPs, so the
+sweep measures scheduling/placement/batching).  An isolated run of the
+small tenant's trace gives its no-contention p99 baseline.
+
+    PYTHONPATH=src python benchmarks/bench_serve_scale.py [--smoke]
+
+``--smoke`` writes ``BENCH_serve.json`` and fails unless
+
+  * disaggregated+locality sustains >= 1.3x the static engine's req/s,
+  * every cross-pilot KV movement is on the DataPlane byte ledger
+    (ledger[kv-splice] == router splice bytes, > 0),
+  * DRF budgets hold: the flooding tenant never exceeds its slot cap
+    and the small tenant's p99 stays within 2x of its isolated p99.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import (PilotDescription, ResourceManager, Session,
+                        TransferCostModel)
+from repro.core.queues import QueueConfig
+from repro.serve.engine import Request, ServeEngine, SimBackend
+
+RATIO_FLOOR = 1.3        # disagg must beat static by this (sustained req/s)
+P99_FACTOR = 2.0         # small-tenant p99 cap vs isolated run
+
+SLOTS_TOTAL = 16         # decode slots in both arms (1x16 vs 2x8)
+FLOOD_CAP = 8            # fleet-wide DRF slot cap for the flooding tenant
+MED_CAP = 4
+
+SIM = dict(prefill_s=1.2e-3, step_s=4e-4)
+PACE_RATE = 1200.0       # open-loop arrival rate (req/s) for the p99 runs
+
+
+def make_requests(n_users: int, *, max_new: int = 4) -> List[Request]:
+    """70/15/15 flood/med/small mix, round-robin interleaved arrival
+    order (a sorted-by-tenant order would hand the static FIFO arm an
+    artificial burst pattern)."""
+    rng = np.random.default_rng(0)
+    mix = (["flood"] * 14 + ["med"] * 3 + ["small"] * 3)
+    reqs = []
+    for i in range(n_users):
+        plen = int(rng.integers(4, 24))
+        reqs.append(Request(uid=i, tokens=rng.integers(
+            0, 1024, (plen,)).astype(np.int32), max_new=max_new,
+            tenant=mix[i % len(mix)]))
+    return reqs
+
+
+def percentile_latency(reqs: Sequence[Request], tenant: str, q: float = 99
+                       ) -> float:
+    lats = [r.t_done - r.t_submit for r in reqs
+            if r.tenant == tenant and r.done]
+    return float(np.percentile(lats, q)) if lats else 0.0
+
+
+def run_static(reqs: List[Request]) -> Dict:
+    """The seed path: one engine, one pilot, prefill inline on the
+    decode thread, FIFO admission.  No DataPlane — nothing moves."""
+    eng = ServeEngine(backend=SimBackend(**SIM), slots=SLOTS_TOTAL,
+                      max_seq=64, prompt_bucket=8, name="static")
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.monotonic()
+    eng.run_until_drained(timeout_s=600.0)
+    wall = time.monotonic() - t0
+    return {"mode": "static", "wall_s": wall,
+            "reqs_per_s": len(reqs) / wall,
+            "p99": {t: percentile_latency(reqs, t)
+                    for t in ("flood", "med", "small")}}
+
+
+def build_session() -> Session:
+    rm = ResourceManager(devices=jax.devices() * 8)
+    s = Session(rm, cost_model=TransferCostModel())
+    for name in ("decode0", "decode1"):
+        s.add_pilot(PilotDescription(n_chips=2, name=name,
+                                     enable_speculation=False))
+    # the prefill pilot runs DRF over declared tenant queues, so the
+    # overlay's head arbitration keeps the flooding tenant from
+    # monopolizing prefill workers too (weights = paid priority)
+    s.add_pilot(PilotDescription(
+        n_chips=4, name="compute", enable_speculation=False,
+        scheduler_policy="drf",
+        queues=[QueueConfig("flood", weight=1.0),
+                QueueConfig("med", weight=2.0),
+                QueueConfig("small", weight=4.0),
+                QueueConfig("default")]))
+    return s
+
+
+def run_disagg(reqs: List[Request], *, mode: str = "disagg",
+               arrivals: Optional[List[float]] = None) -> Dict:
+    """Two decode engines + overlay prefill on the compute pilot, KV
+    pages on the DataPlane, DRF budgets shared across both engines.
+
+    Burst submission (``arrivals=None``) measures sustained capacity;
+    an ``arrivals`` schedule (seconds offsets) paces submission open-
+    loop so per-tenant p99 measures contention, not queue position."""
+    s = build_session()
+    try:
+        router = s.serve_pool(
+            lambda: SimBackend(**SIM),
+            n_engines=2, slots=SLOTS_TOTAL // 2, max_seq=64,
+            prompt_bucket=8, decode_pilots=["decode0", "decode1"],
+            prefill_pilot="compute", prefill_workers=4,
+            bytes_per_token=1 << 12,
+            queue_configs=[QueueConfig("flood", max_chips=FLOOD_CAP),
+                           QueueConfig("med", max_chips=MED_CAP,
+                                       weight=2.0),
+                           QueueConfig("small", weight=8.0)])
+        t0 = time.monotonic()
+        for i, r in enumerate(reqs):
+            if arrivals is not None:
+                lag = t0 + arrivals[i] - time.monotonic()
+                if lag > 0:
+                    time.sleep(lag)
+            router.submit(r)
+        router.drain(timeout_s=600.0)
+        wall = time.monotonic() - t0
+        snap = router.snapshot()
+        ledger = s.dataplane.ledger()
+        return {"mode": mode, "wall_s": wall,
+                "reqs_per_s": len(reqs) / wall,
+                "p99": {t: percentile_latency(reqs, t)
+                        for t in ("flood", "med", "small")},
+                "peak_slots": dict(router.admission.peak_slots),
+                "dispatched": snap["dispatched"],
+                "cross_pilot": snap["cross_pilot"],
+                "splice_bytes": snap["splice_bytes"],
+                "prefill_offloaded": snap["prefill_offloaded"],
+                "ledger_kv_splice": ledger["by_reason"].get("kv-splice", 0),
+                "dcn_bytes": ledger["by_link"]["dcn"]}
+    finally:
+        s.shutdown()
+
+
+def sweep(n_users: int = 1000, max_new: int = 4) -> List[Dict]:
+    # capacity arms: burst-submit everything, measure drain rate
+    static = run_static(make_requests(n_users, max_new=max_new))
+    disagg = run_disagg(make_requests(n_users, max_new=max_new))
+    # fairness arms: the same trace paced open-loop at PACE_RATE, and
+    # the small tenant's requests alone at their exact arrival times
+    # from that schedule — so mixed-vs-isolated p99 isolates what the
+    # flood costs the small tenant, which is what DRF must bound
+    mixed = make_requests(n_users, max_new=max_new)
+    arrivals = [i / PACE_RATE for i in range(len(mixed))]
+    paced = run_disagg(mixed, mode="disagg-paced", arrivals=arrivals)
+    iso_idx = [i for i, r in enumerate(mixed) if r.tenant == "small"]
+    iso_reqs = [r for r in make_requests(n_users, max_new=max_new)
+                if r.tenant == "small"]
+    iso = run_disagg(iso_reqs, mode="small-isolated",
+                     arrivals=[arrivals[i] for i in iso_idx])
+    results = [static, disagg, paced, iso]
+    for r in results:
+        r["n_users"] = len(iso_reqs) if r is iso else n_users
+    return results
+
+
+def speedup(results: List[Dict]) -> Optional[float]:
+    by = {r["mode"]: r for r in results}
+    if "static" not in by or "disagg" not in by:
+        return None
+    return by["disagg"]["reqs_per_s"] / by["static"]["reqs_per_s"]
+
+
+def check(results: List[Dict]) -> List[str]:
+    by = {r["mode"]: r for r in results}
+    fails: List[str] = []
+    ratio = speedup(results)
+    if ratio is None or ratio < RATIO_FLOOR:
+        fails.append(f"disagg vs static req/s {ratio} < {RATIO_FLOOR}x")
+    d = by.get("disagg", {})
+    if d.get("cross_pilot", 0) <= 0:
+        fails.append("no cross-pilot KV splices happened")
+    if d.get("splice_bytes", 0) != d.get("ledger_kv_splice", -1):
+        fails.append(
+            f"KV movement off-ledger: router says {d.get('splice_bytes')} "
+            f"bytes, ledger says {d.get('ledger_kv_splice')}")
+    if d.get("peak_slots", {}).get("flood", 0) > FLOOD_CAP:
+        fails.append(f"flood tenant held {d['peak_slots']['flood']} slots "
+                     f"(cap {FLOOD_CAP})")
+    p99_small = by.get("disagg-paced", {}).get("p99", {}).get("small", 0.0)
+    p99_iso = by.get("small-isolated", {}).get("p99", {}).get("small", 0.0)
+    if p99_iso > 0 and p99_small > P99_FACTOR * p99_iso:
+        fails.append(f"small-tenant p99 {p99_small * 1e3:.1f}ms > "
+                     f"{P99_FACTOR}x isolated {p99_iso * 1e3:.1f}ms")
+    return fails
+
+
+def run(smoke: bool = True) -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'serve')."""
+    results = sweep() if smoke else sweep(n_users=2000, max_new=6)
+    rows = []
+    for r in results:
+        p99 = " ".join(f"p99_{t}={v * 1e3:.1f}ms"
+                       for t, v in r["p99"].items() if v)
+        extra = ""
+        if "splice_bytes" in r:
+            extra = (f" splice_mb={r['splice_bytes'] / 1e6:.1f} "
+                     f"cross_pilot={r['cross_pilot']}")
+        rows.append({
+            "name": f"serve/{r['mode']}",
+            "us_per_call": r["wall_s"] / max(r["n_users"], 1) * 1e6,
+            "derived": f"reqs_per_s={r['reqs_per_s']:.0f} {p99}{extra}"})
+    ratio = speedup(results)
+    if ratio is not None:
+        rows.append({"name": "serve/speedup", "us_per_call": 0.0,
+                     "derived": f"disagg_vs_static={ratio:.2f}x"})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: write --json (default BENCH_serve.json) "
+                         f"and fail below the {RATIO_FLOOR}x req/s floor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (implied by --smoke)")
+    ap.add_argument("--users", type=int, default=None,
+                    help="request count (default: 1000 smoke / 2000 full)")
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="decode tokens per request (default 4 / 6 full)")
+    args = ap.parse_args()
+
+    n = args.users or (1000 if args.smoke else 2000)
+    mn = args.max_new or (4 if args.smoke else 6)
+    results = sweep(n_users=n, max_new=mn)
+
+    hdr = (f"{'mode':>16} {'wall_s':>8} {'req/s':>8} {'p99_small':>10} "
+           f"{'cross':>6} {'splice_MB':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in results:
+        print(f"{r['mode']:>16} {r['wall_s']:>8.3f} "
+              f"{r['reqs_per_s']:>8.0f} "
+              f"{r['p99'].get('small', 0) * 1e3:>9.1f}m "
+              f"{r.get('cross_pilot', 0):>6} "
+              f"{r.get('splice_bytes', 0) / 1e6:>10.2f}")
+
+    ratio = speedup(results)
+    if ratio is not None:
+        print(f"\ndisagg vs static sustained req/s: {ratio:.2f}x "
+              f"(floor {RATIO_FLOOR}x)")
+
+    json_path = args.json or ("BENCH_serve.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": results, "speedup": ratio,
+                       "ratio_floor": RATIO_FLOOR,
+                       "p99_factor": P99_FACTOR}, f, indent=2)
+        print(f"wrote {json_path}")
+
+    if args.smoke:
+        fails = check(results)
+        for msg in fails:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        if fails:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fairshare — 3 tenants at 6:1:1 load: FIFO vs DRF vs Capacity policies
   dispatch  — Raptor overlay vs per-CU scheduler dispatch throughput
   staging   — async prefetch + replica cache vs synchronous staging
+  serve     — disaggregated prefill/decode serving vs static engine
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
@@ -22,13 +23,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
-                             "fairshare", "dispatch", "staging", "kernels",
+                             "fairshare", "dispatch", "staging", "serve", "kernels",
                              "roofline"])
     args = ap.parse_args()
 
     from benchmarks import (bench_dispatch, bench_elastic, bench_fairshare,
                             bench_kernels, bench_session_placement,
-                            bench_staging, fig5_overheads, fig6_kmeans,
+                            bench_serve_scale, bench_staging,
+                            fig5_overheads, fig6_kmeans,
                             roofline_table)
     sections = {
         "fig5": fig5_overheads.run,
@@ -38,6 +40,7 @@ def main() -> None:
         "fairshare": bench_fairshare.run,
         "dispatch": bench_dispatch.run,
         "staging": bench_staging.run,
+        "serve": bench_serve_scale.run,
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,
     }

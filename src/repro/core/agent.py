@@ -75,6 +75,7 @@ class Agent:
         self.status: Dict[str, Any] = {}
         self._status_version = -1     # scheduler version the status reflects
         self._overlays: Dict[str, Any] = {}   # Raptor masters on this pilot
+        self._serves: Dict[str, Any] = {}     # decode engines on this pilot
         self._lock = threading.Lock()
         # event-driven wake: the scheduler signals submits/releases/grows
         # directly instead of the loop discovering them on a fixed poll
@@ -157,6 +158,21 @@ class Agent:
         with self._lock:
             return list(self._overlays.values())
 
+    # ----------------------------------------------------- serving engines
+    def register_serve(self, engine) -> None:
+        """Track a decode engine living on this pilot so its backlog
+        rides the heartbeat (ControlPlane pressure sees serving load)."""
+        with self._lock:
+            self._serves[engine.name] = engine
+
+    def unregister_serve(self, engine) -> None:
+        with self._lock:
+            self._serves.pop(engine.name, None)
+
+    def serves(self) -> List:
+        with self._lock:
+            return list(self._serves.values())
+
     def reserve_chips(self, n: int, *, tenant: Optional[str] = None,
                       queue: Optional[str] = None) -> List[int]:
         """Take n chips out of the slot table (Mode-I analytics carve-out).
@@ -206,9 +222,10 @@ class Agent:
         # keeps polling idle pilots; beats must not cost lock traffic).
         version = self.scheduler.version()
         overlays = self.overlays()
+        serves = self.serves()
         prefetcher = getattr(self.pilot, "prefetcher", None)
         staging_active = prefetcher is not None and prefetcher.active
-        if (not force and self.status and not overlays
+        if (not force and self.status and not overlays and not serves
                 and not staging_active
                 and version == self._status_version):
             self.status["t"] = now
@@ -241,6 +258,10 @@ class Agent:
             # transfers is not also handed more work
             "staging": (prefetcher.snapshot()
                         if prefetcher is not None else {}),
+            # decode-engine occupancy + waiting lines — the ControlPlane
+            # folds the serve backlog into pressure_of so a pilot whose
+            # engines are drowning in requests stops attracting more work
+            "serve": {e.name: e.snapshot() for e in serves},
         }
 
     def heartbeat(self) -> Dict[str, Any]:

@@ -61,6 +61,10 @@ class ControlPlane:
     # transfer counts as a fraction of a chip of demand, so a pilot
     # drowning in stage-ins is not also handed more work
     STAGING_BACKLOG_WEIGHT = 0.25
+    # each request waiting on a decode engine counts as a fraction of a
+    # chip of demand: a pilot whose serving engines have deep admission
+    # lines stops attracting additional batch work
+    SERVE_BACKLOG_WEIGHT = 0.25
 
     def __init__(self, pm, *, hysteresis: float = 0.5,
                  min_chips: int = 1, max_move_fraction: float = 0.5,
@@ -96,6 +100,9 @@ class ControlPlane:
         demand = hb.get("queued_chip_demand", 0) + hb.get("busy_chips", 0)
         demand += (cls.STAGING_BACKLOG_WEIGHT
                    * hb.get("staging", {}).get("backlog", 0))
+        demand += (cls.SERVE_BACKLOG_WEIGHT
+                   * sum(s.get("waiting", 0)
+                         for s in hb.get("serve", {}).values()))
         return demand / slots
 
     @staticmethod

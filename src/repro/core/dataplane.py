@@ -115,17 +115,35 @@ class Lineage:
 
 
 class PilotData:
-    """A named sharded array with known placement (the HDFS-block set)."""
+    """A named sharded array with known placement (the HDFS-block set).
 
-    def __init__(self, name: str, array: jax.Array):
+    A *virtual* dataset (``array is None``) is accounting-only: a
+    declared byte size with pilot-level replica tracking but no backing
+    buffer.  KV-cache pages are registered this way — the page bytes
+    live inside a serve engine's spliced decode cache, but their
+    placement and every cross-pilot shipment still go through the same
+    ledger as materialized data.  ``itemsize`` is the element width the
+    int8 wire-compression ratio is derived from.
+    """
+
+    def __init__(self, name: str, array: Optional[jax.Array],
+                 nbytes: Optional[int] = None, itemsize: int = 4):
         self.name = name
         self.array = array
+        self._nbytes = nbytes
+        self.itemsize = itemsize
 
     @property
     def nbytes(self) -> int:
-        return self.array.nbytes
+        return self._nbytes if self.array is None else self.array.nbytes
+
+    @property
+    def is_virtual(self) -> bool:
+        return self.array is None
 
     def device_set(self) -> Set:
+        if self.array is None:
+            return set()
         return {d for d in self.array.sharding.device_set}
 
     def locality(self, devices: Sequence) -> float:
@@ -164,6 +182,31 @@ class DataPlane:
             if lineage is not None:
                 self._lineage[name] = lineage
         return pd
+
+    def put_virtual(self, name: str, nbytes: int, *, pilot: str,
+                    itemsize: int = 4,
+                    lineage: Optional[Lineage] = None) -> PilotData:
+        """Register an accounting-only dataset: `nbytes` attributed to
+        `pilot` with no backing array (see :class:`PilotData`).  Replica
+        tracking, locality scoring, ledgered movement and GFS spooling
+        all work; device-level operations skip it."""
+        pd = PilotData(name, None, nbytes=int(nbytes), itemsize=itemsize)
+        with self._lock:
+            self._data[name] = pd
+            self._home[name] = {pilot}
+            if lineage is not None:
+                self._lineage[name] = lineage
+        return pd
+
+    def remove(self, name: str) -> bool:
+        """Forget a dataset entirely (all replicas + lineage).  Used when
+        the data's lifetime genuinely ends — e.g. a finished request's
+        KV pages.  Returns whether it existed."""
+        with self._lock:
+            existed = self._data.pop(name, None) is not None
+            self._home.pop(name, None)
+            self._lineage.pop(name, None)
+        return existed
 
     def get(self, name: str) -> PilotData:
         return self._data[name]
@@ -299,8 +342,20 @@ class DataPlane:
         """Inter-pilot move: reshard onto the target pilot's devices and
         re-home the dataset there.  Only the non-resident bytes pay the
         link cost (a replica already on the target moves nothing).
-        Returns (moved array, bytes recorded on `link`)."""
+        Returns (moved array, bytes recorded on `link`).
+
+        Virtual datasets take the accounting-only path: `sharding` may
+        be None, no device_put happens, but the non-resident bytes are
+        simulated and ledgered exactly like a materialized move."""
         pd = self._data[name]
+        if pd.is_virtual:
+            nonres = self.bytes_nonresident([name], pilot)
+            self._simulate(nonres, link)
+            with self._lock:
+                self._home[name] = {pilot}
+            if nonres:
+                self.record_moved(nonres, link, reason or f"move:{name}")
+            return None, nonres
         nonres = self.bytes_nonresident([name], pilot,
                                         list(sharding.device_set))
         moved = jax.device_put(pd.array, sharding)
@@ -331,6 +386,20 @@ class DataPlane:
         step, like any wire-compressed staging tier).
         Returns (landed array, bytes recorded on `link`)."""
         pd = self._data[name]
+        if pd.is_virtual:
+            nonres = self.bytes_nonresident([name], pilot)
+            wire = nonres
+            if (compress == "int8" and link in (Link.DCN, Link.GFS)
+                    and nonres >= min_compress_bytes and pd.itemsize > 1):
+                wire = max(nonres // pd.itemsize, 1)
+                with self._lock:
+                    self._compressed_saved += nonres - wire
+            self._simulate(wire, link)
+            with self._lock:
+                self._home.setdefault(name, set()).add(pilot)
+            if nonres:
+                self.record_moved(wire, link, reason or f"replicate:{name}")
+            return None, (wire if nonres else 0)
         nonres = self.bytes_nonresident([name], pilot,
                                         list(sharding.device_set))
         if nonres == 0:

@@ -70,7 +70,7 @@ class MicroTask:
 
     __slots__ = ("uid", "seq", "queue", "tenant", "tag", "priority",
                  "hbm_bytes", "result", "error", "timings",
-                 "_payload", "_raw", "_done")
+                 "_payload", "_raw", "_done", "_callbacks", "_cb_lock")
 
     def __init__(self, seq: int, fn: Callable, args: Tuple, kwargs: Dict,
                  *, queue: str, tenant: Optional[str], tag: str,
@@ -92,6 +92,8 @@ class MicroTask:
             self._payload = None
             self._raw = (fn, args, kwargs)
         self._done = threading.Event()
+        self._callbacks: List[Callable[["MicroTask"], None]] = []
+        self._cb_lock = threading.Lock()
 
     @property
     def sort_key(self) -> Tuple[int, int]:
@@ -104,7 +106,24 @@ class MicroTask:
         return self._raw  # type: ignore[return-value]
 
     def _finish(self) -> None:
-        self._done.set()
+        with self._cb_lock:
+            self._done.set()
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:
+                pass  # a bad callback must not take down the flusher
+
+    def add_done_callback(self, cb: Callable[["MicroTask"], None]) -> None:
+        """Run `cb(task)` when the result publishes (completion order,
+        on the master's flush thread — keep it cheap, e.g. a queue
+        push).  Fires immediately if already done."""
+        with self._cb_lock:
+            if not self._done.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
 
     @property
     def done(self) -> bool:

@@ -57,10 +57,14 @@ class DataRef:
     ``link_hint`` names the tier the transfer should ride (defaults:
     DCN for stage-in promotion, GFS for stage-out spool); ``compress``
     selects wire compression (currently ``"int8"``) for DCN/GFS
-    transfers above the prefetcher's size threshold."""
+    transfers above the prefetcher's size threshold.  A stage-out with
+    ``evict_after`` drops the spooling pilot's replica once the archive
+    copy lands — true cold tiering (a finished request's KV pages leave
+    HBM accounting but stay restorable from ``@gfs``)."""
     name: str
     link_hint: Optional[str] = None
     compress: Optional[str] = None
+    evict_after: bool = False
 
     def link(self, default: str) -> str:
         return self.link_hint or default
@@ -334,6 +338,13 @@ class Prefetcher:
             nbytes = self.data.spool_out(
                 name, link=req.ref.link(Link.GFS),
                 reason=req.reason or f"stage-out:{name}")
+            if req.ref.evict_after:
+                # cold tiering: the archive replica just landed, so the
+                # local copy is droppable (keep_last still guards the
+                # degenerate non-GFS case where no archive was left)
+                if self.data.drop_replica(name, self.pilot.uid,
+                                          keep_last=True):
+                    self.cache.forget(name)
             with self._lock:
                 self.stats["stage_outs"] += 1
                 self.stats["bytes_moved"] += nbytes

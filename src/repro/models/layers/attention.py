@@ -75,6 +75,7 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
 
 def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
                  k_pos: jax.Array, *, causal: bool, window: int = 0,
+                 k_valid: Optional[jax.Array] = None,
                  q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK) -> jax.Array:
     """Online-softmax chunked attention; memory O(q_chunk * kv_chunk).
 
@@ -93,6 +94,10 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
     kc = k.reshape(B, nk, kv_chunk, H, hd).swapaxes(0, 1)       # (nk,B,kc,H,hd)
     vc = v.reshape(B, nk, kv_chunk, H, hd).swapaxes(0, 1)
     kp = k_pos.reshape(nk, kv_chunk)
+    if k_valid is None:
+        kval = jnp.ones((nk, kv_chunk), bool)
+    else:
+        kval = k_valid.reshape(nk, kv_chunk)
 
     def q_step(_, q_in):
         qi, qpi = q_in
@@ -102,9 +107,9 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
         @jax.checkpoint
         def kv_step(carry, kv_in):
             m, l, acc = carry
-            ki, vi, kpi = kv_in
+            ki, vi, kpi, kvi = kv_in
             logits = jnp.einsum("bqhd,bkhd->bhqk", qi, ki).astype(jnp.float32)
-            logits = logits * scale + _mask_bias(qpi, kpi, causal, window)
+            logits = logits * scale + _mask_bias(qpi, kpi, causal, window, kvi)
             m_new = jnp.maximum(m, logits.max(axis=-1))
             p = jnp.exp(logits - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -117,7 +122,7 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
         m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
         a0 = jnp.zeros((B, q_chunk, H, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp, kval))
         out = acc / jnp.maximum(l, 1e-30)[..., None].swapaxes(1, 2)
         return None, out.astype(q.dtype)
 
@@ -128,10 +133,13 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
 def gqa_forward(cfg, p: Params, x: jax.Array, positions: jax.Array, *,
                 causal: bool = True, window: int = 0,
                 kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                k_valid: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full-sequence attention (train/prefill). Returns (out, kv-cache).
 
     kv_override supplies (k, v) already projected — used by cross-attention.
+    k_valid is an (S,) bool key-validity mask: False keys (e.g. left-pad
+    slots in bucketed serving prefill) are never attended.
     """
     B, S, _ = x.shape
     h = cfg.n_heads
@@ -148,19 +156,26 @@ def gqa_forward(cfg, p: Params, x: jax.Array, positions: jax.Array, *,
     kf, vf = _repeat_kv(k, h), _repeat_kv(v, h)
     k_pos = positions if kv_override is None else jnp.arange(k.shape[1])
     if max(S, k.shape[1]) > CHUNK_THRESHOLD:
-        out = chunked_sdpa(q, kf, vf, positions, k_pos, causal=causal, window=window)
+        out = chunked_sdpa(q, kf, vf, positions, k_pos, causal=causal,
+                           window=window, k_valid=k_valid)
     else:
-        out = sdpa(q, kf, vf, positions, k_pos, causal=causal, window=window)
+        out = sdpa(q, kf, vf, positions, k_pos, causal=causal, window=window,
+                   k_valid=k_valid)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
 
 def gqa_decode(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
-               pos: jax.Array, *, window: int = 0,
-               cross: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+               pos: jax.Array, *, window: int = 0, cross: bool = False,
+               start: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Single-token decode. x: (B,1,d); cache k/v: (B,Sc,kv,hd); pos: (B,).
 
     For sliding-window layers the cache is a ring buffer of size `window`.
     For cross-attention the cache holds encoder k/v and is not updated.
+    start (B,) marks the first real cache position per row (left-pad count
+    from bucketed prefill): slots below it are never attended, and RoPE
+    runs at pad-relative positions (pos - start) so a padded prompt decodes
+    bit-identically to its unpadded form.
     """
     B = x.shape[0]
     h = cfg.n_heads
@@ -170,7 +185,8 @@ def gqa_decode(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     if not cross:
         k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
         v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-        cos, sin = rope_angles(pos[:, None], cfg.head_dim_, cfg.rope_theta)
+        rpos = pos if start is None else pos - start
+        cos, sin = rope_angles(rpos[:, None], cfg.head_dim_, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k_new = apply_rope(k_new, cos, sin)
         slot = (pos % Sc).astype(jnp.int32)
@@ -198,8 +214,14 @@ def gqa_decode(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
         slots = jnp.arange(Sc)
         if window:
             valid = (slots[None, :] < pos[:, None]) | (pos[:, None] >= Sc)
+            if start is not None:
+                # absolute position held by ring-buffer slot s
+                abs_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % Sc)
+                valid &= abs_pos >= start[:, None]
         else:
             valid = slots[None, :] <= pos[:, None]
+            if start is not None:
+                valid &= slots[None, :] >= start[:, None]
         logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1).astype(cache["v"].dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", w, cache["v"])
@@ -249,6 +271,7 @@ def _mla_latent(cfg, p, x, positions):
 
 
 def mla_forward(cfg, p: Params, x: jax.Array, positions: jax.Array,
+                k_valid: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Train/prefill MLA with naive (expanded) K/V; latent cache returned."""
     B, S, _ = x.shape
@@ -264,24 +287,29 @@ def mla_forward(cfg, p: Params, x: jax.Array, positions: jax.Array,
     # pad v to qk dim for the shared chunked kernel, then slice back
     if S > CHUNK_THRESHOLD:
         vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - vh)))
-        out = chunked_sdpa(q, k, vp, positions, positions, causal=True)[..., :vh]
+        out = chunked_sdpa(q, k, vp, positions, positions, causal=True,
+                           k_valid=k_valid)[..., :vh]
     else:
-        out = sdpa(q, k, v, positions, positions, causal=True)
+        out = sdpa(q, k, v, positions, positions, causal=True, k_valid=k_valid)
     cache = {"ckv": ckv, "k_rope": k_rope}
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
 
 def mla_decode(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
-               pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+               pos: jax.Array, start: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Weight-absorbed MLA decode: attention runs in the latent space.
 
     score(t) = q_nope^T W_uk ckv_t + q_rope . k_rope_t
     out      = (sum_t w_t ckv_t) W_uv
+
+    start (B,): first real cache slot per row (see gqa_decode).
     """
     B = x.shape[0]
     Sc = cache["ckv"].shape[1]
-    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])
-    ckv_new, k_rope_new = _mla_latent(cfg, p, x, pos[:, None])
+    rpos = pos if start is None else pos - start
+    q_nope, q_rope = _mla_q(cfg, p, x, rpos[:, None])
+    ckv_new, k_rope_new = _mla_latent(cfg, p, x, rpos[:, None])
     slot = (pos % Sc).astype(jnp.int32)
 
     def write(buf, val, s):
@@ -297,6 +325,8 @@ def mla_decode(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     logits += jnp.einsum("bshk,btk->bhst", q_rope, cache["k_rope"]).astype(jnp.float32)
     logits *= (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
     valid = jnp.arange(Sc)[None, :] <= pos[:, None]
+    if start is not None:
+        valid &= jnp.arange(Sc)[None, :] >= start[:, None]
     logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", w.astype(cache["ckv"].dtype), cache["ckv"])

@@ -106,18 +106,20 @@ def init_block(cfg: ModelConfig, seg: Segment, key) -> Params:
 
 
 def _mixer_forward(cfg, seg: Segment, p: Params, x, positions,
-                   enc_kv=None) -> Tuple[jax.Array, Dict[str, Any]]:
+                   enc_kv=None, k_valid=None) -> Tuple[jax.Array, Dict[str, Any]]:
     """Token-mixing sublayer(s) on a full sequence; returns (dx, cache)."""
     h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
     cache: Dict[str, Any] = {}
     parts = []
     if seg.attn == "gqa":
         a, kv = attn_lib.gqa_forward(cfg, p["attn"], h, positions,
-                                     causal=seg.causal, window=seg.window)
+                                     causal=seg.causal, window=seg.window,
+                                     k_valid=k_valid)
         cache.update(kv)
         parts.append(("attn", a))
     elif seg.attn == "mla":
-        a, kv = attn_lib.mla_forward(cfg, p["attn"], h, positions)
+        a, kv = attn_lib.mla_forward(cfg, p["attn"], h, positions,
+                                     k_valid=k_valid)
         cache.update(kv)
         parts.append(("attn", a))
     if seg.ssm:
@@ -135,6 +137,7 @@ def _mixer_forward(cfg, seg: Segment, p: Params, x, positions,
 
 def block_forward(cfg, seg: Segment, p: Params, x, positions, enc_out=None,
                   moe_groups: int = 1, moe_ep_axis=None, save_spec=None,
+                  k_valid=None,
                   ) -> Tuple[jax.Array, Dict[str, Any], jax.Array]:
     """Full-sequence block. Returns (x, cache, moe_aux)."""
     def _save(v):
@@ -143,7 +146,7 @@ def block_forward(cfg, seg: Segment, p: Params, x, positions, enc_out=None,
         return checkpoint_name(_constrain(v, save_spec), "tp_out")
 
     aux = jnp.zeros((), jnp.float32)
-    dx, cache = _mixer_forward(cfg, seg, p, x, positions)
+    dx, cache = _mixer_forward(cfg, seg, p, x, positions, k_valid=k_valid)
     x = x + _save(dx)
     if seg.cross:
         h = common.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
@@ -165,20 +168,22 @@ def block_forward(cfg, seg: Segment, p: Params, x, positions, enc_out=None,
 
 
 def block_decode(cfg, seg: Segment, p: Params, x, cache: Dict[str, Any],
-                 pos, moe_groups: int = 1, moe_ep_axis=None) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Single-token block step. x: (B,1,d); pos: (B,)."""
+                 pos, moe_groups: int = 1, moe_ep_axis=None,
+                 start=None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Single-token block step. x: (B,1,d); pos: (B,); start: (B,) or None."""
     h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
     parts = []
     if seg.attn == "gqa":
         a, kv = attn_lib.gqa_decode(cfg, p["attn"], h,
                                     {"k": cache["k"], "v": cache["v"]},
-                                    pos, window=seg.window)
+                                    pos, window=seg.window, start=start)
         new_cache.update(kv)
         parts.append(a)
     elif seg.attn == "mla":
         a, kv = attn_lib.mla_decode(cfg, p["attn"], h,
-                                    {"ckv": cache["ckv"], "k_rope": cache["k_rope"]}, pos)
+                                    {"ckv": cache["ckv"], "k_rope": cache["k_rope"]},
+                                    pos, start=start)
         new_cache.update(kv)
         parts.append(a)
     if seg.ssm:
@@ -258,7 +263,7 @@ def _grad_dtype_guard(x):
 def _run_segments(cfg, segs, seg_params, x, positions, enc_out=None, *,
                   remat: bool = True, want_cache: bool = False,
                   act_spec=None, moe_groups: int = 1, moe_ep_axis=None,
-                  remat_policy=None, save_spec=None):
+                  remat_policy=None, save_spec=None, k_valid=None):
     """Scan each segment; returns (x, per-segment stacked caches, aux sum)."""
     caches, aux_total = [], jnp.zeros((), jnp.float32)
     for seg, sp in zip(segs, seg_params):
@@ -270,7 +275,7 @@ def _run_segments(cfg, segs, seg_params, x, positions, enc_out=None, *,
             carry = _grad_dtype_guard(carry)
             y, cache, aux = block_forward(cfg, seg, lp, carry, positions,
                                           enc_out, moe_groups, moe_ep_axis,
-                                          save_spec)
+                                          save_spec, k_valid)
             y = _constrain(y, act_spec)
             if not want_cache:  # keep k/v tensors out of the jaxpr for training
                 cache = {}
@@ -411,8 +416,18 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
 
 def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
             *, moe_groups: int = 1, moe_ep_axis=None,
+            positions: Optional[jax.Array] = None,
+            pad_mask: Optional[jax.Array] = None,
             ) -> Tuple[List[Dict[str, Any]], jax.Array]:
-    """Run the full prompt; returns (caches, last-position logits)."""
+    """Run the full prompt; returns (caches, last-position logits).
+
+    For left-padded (bucketed) prompts pass ``pad_mask`` — an (S,) bool
+    that is False on pad slots, so they are never attended — and
+    ``positions = arange(S) - n_pad`` so real tokens keep the RoPE
+    positions they would have in the unpadded prompt. Together the two
+    make a padded prefill bit-identical (masked keys contribute exactly
+    zero softmax weight) to the unpadded one.
+    """
     segs = build_segments(cfg)
     enc_out = None
     if cfg.is_encoder_decoder:
@@ -422,10 +437,12 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
                                       enc_x, jnp.arange(enc_x.shape[1]), remat=False)
         enc_out = common.rmsnorm(params["enc_final_norm"], enc_out, cfg.norm_eps)
     x = embed_inputs(cfg, params, batch)
-    positions = jnp.arange(x.shape[1])
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
     x, caches, _ = _run_segments(cfg, segs, params["segments"], x, positions,
                                  enc_out, remat=False, want_cache=True,
-                                 moe_groups=moe_groups, moe_ep_axis=moe_ep_axis)
+                                 moe_groups=moe_groups, moe_ep_axis=moe_ep_axis,
+                                 k_valid=pad_mask)
     x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = common.unembed(cfg, params, x[:, -1:, :])
     # prefill caches for windowed segments keep only the trailing window
@@ -449,9 +466,13 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
 
 def decode_step(cfg: ModelConfig, params: Params, caches: List[Dict[str, Any]],
                 tokens: jax.Array, pos: jax.Array, *, moe_groups: int = 1,
-                moe_ep_axis=None,
+                moe_ep_axis=None, start: Optional[jax.Array] = None,
                 ) -> Tuple[List[Dict[str, Any]], jax.Array]:
-    """One decode step. tokens: (B,1) int32; pos: (B,) absolute positions."""
+    """One decode step. tokens: (B,1) int32; pos: (B,) absolute positions.
+
+    start (B,) marks the first real (non-pad) cache slot per row; pad
+    slots below it are masked out and RoPE runs pad-relative.
+    """
     segs = build_segments(cfg)
     x = common.embed(params, tokens)
     new_caches = []
@@ -460,7 +481,7 @@ def decode_step(cfg: ModelConfig, params: Params, caches: List[Dict[str, Any]],
             lp, lc = xs
             y, nc = block_decode(cfg, seg, lp, carry, lc, pos,
                                  moe_groups=moe_groups,
-                                 moe_ep_axis=moe_ep_axis)
+                                 moe_ep_axis=moe_ep_axis, start=start)
             return y, nc
         x, nc = jax.lax.scan(body, x, (sp, cache))
         new_caches.append(nc)

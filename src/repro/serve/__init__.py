@@ -1,2 +1,6 @@
-from .engine import Request, ServeEngine  # noqa: F401
+from .engine import (AdmissionControl, ModelBackend,  # noqa: F401
+                     PrefillResult, Request, ServeEngine, SimBackend,
+                     StaticBudgetAdmission)
+from .kv_pages import KVLease, KVPageManager, kv_cache_rates  # noqa: F401
+from .router import DrfAdmission, EngineHandle, ServeRouter  # noqa: F401
 from .step import make_decode_step, make_prefill_step  # noqa: F401

@@ -3,22 +3,35 @@
 The framework's serving CU kind: a request queue feeding a fixed-width
 decode batch. Requests join mid-flight as slots free up (continuous
 batching) — prefill for a joining request runs while other slots keep
-decoding; per-slot positions live in the `pos` vector the decode step
-already takes. The whole engine runs as one long-lived gang CU on a
-Pilot (examples/serve_batch.py shows the one-shot variant).
+decoding; per-slot positions live in the host-side ``pos`` vector.
 
-Single-request prefill uses the shared jitted prefill at fixed prompt
-buckets (pad-to-bucket keeps recompilation bounded). Prompts are
-left-padded into the bucket; pad positions are attended (a pad mask is
-the quality-side TODO — system behaviour, latency accounting and cache
-splicing are what this engine demonstrates).
+Correctness: prompts are left-padded into fixed buckets (bounded
+recompilation), with a pad mask during prefill and a per-slot ``start``
+vector during decode, so pad tokens are never attended and RoPE runs at
+pad-relative positions — a bucketed prompt decodes bit-identically to
+its unpadded form (see ``transformer.prefill``).
+
+Throughput: the decode loop does ONE host↔device sync per step (the
+sampled token vector); positions, remaining-token counts and finish
+detection are vectorized NumPy on the host.  Admission drains a deque
+in one pass per round (no O(n²) ``list.remove`` scans), and the drain
+loop blocks on the intake queue when idle instead of busy-spinning.
+
+Disaggregation: the model work lives behind a small backend interface
+(``prefill`` / ``splice`` / ``step``), so prefill can run elsewhere —
+e.g. as a Raptor micro-task on a compute-heavy pilot — and enter
+through :meth:`ServeEngine.submit_prefilled` with its cache in hand
+(serve/router.py routes those by KV locality).  :class:`SimBackend`
+models the per-step costs without a real model for scale benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +44,7 @@ from repro.serve.step import make_decode_step
 
 @dataclasses.dataclass(eq=False)      # identity eq: the auto __eq__ would
 class Request:                        # compare ndarray fields (ambiguous
-    uid: int                          # truth value in _waiting.remove)
+    uid: int                          # truth value in membership tests)
     tokens: np.ndarray            # prompt token ids (1-D)
     max_new: int = 16
     done: bool = False
@@ -40,145 +53,379 @@ class Request:                        # compare ndarray fields (ambiguous
     t_first_token: float = 0.0
     t_done: float = 0.0
     tenant: str = "default"       # admission-budget key (multi-tenant serving)
+    kv_bytes: int = 0             # KV-page bytes leased (DRF's second axis)
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_seq: int = 256, prompt_bucket: int = 32,
-                 tenant_budget: Optional[Dict[str, int]] = None,
-                 default_tenant_budget: Optional[int] = None):
-        """``tenant_budget`` caps the decode slots one tenant may hold
-        at once (per-tenant override; ``default_tenant_budget`` for
-        everyone else).  A tenant at budget is skipped at admission —
-        later requests from other tenants join ahead of it — so one
-        tenant's flood cannot monopolize the batch.  With no budget the
-        engine admits strictly FIFO, exactly the pre-tenant behavior."""
+@dataclasses.dataclass
+class PrefillResult:
+    """A finished prefill, ready to splice into a decode slot."""
+    caches: Any                   # single-request caches (backend-defined)
+    next_tok: int                 # argmax of the last-position logits
+    bucket: int                   # padded prompt length (initial pos)
+    pad: int                      # left-pad count (the slot's `start`)
+
+
+# ---------------------------------------------------------------- backends
+class ModelBackend:
+    """Real-model backend: jitted bucketed prefill + batched decode."""
+
+    def __init__(self, cfg: ModelConfig, params):
         assert cfg.frontend == "none" and not cfg.is_encoder_decoder, \
             "continuous batching engine supports plain LM archs"
         self.cfg = cfg
         self.params = params
-        self.slots = slots
-        self.max_seq = max_seq
-        self.bucket = prompt_bucket
-        self.tenant_budget = tenant_budget
-        self.default_tenant_budget = default_tenant_budget
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self._waiting: List[Request] = []   # arrival-ordered admission line
         self._decode = jax.jit(make_decode_step(cfg, sample=True),
                                donate_argnums=(1,))
         self._prefill = jax.jit(
-            lambda p, b: transformer.prefill(cfg, p, b))
-        self.caches = transformer.init_caches(cfg, slots, max_seq)
-        self.pos = jnp.zeros((slots,), jnp.int32)
-        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
-        self.active: List[Optional[Request]] = [None] * slots
-        self.remaining = np.zeros(slots, np.int32)
-        self.outputs: Dict[int, List[int]] = {}
-        self.steps = 0
+            lambda p, toks, pos, mask: transformer.prefill(
+                cfg, p, {"tokens": toks}, positions=pos, pad_mask=mask))
 
-    # ------------------------------------------------------------- intake
-    def submit(self, req: Request) -> None:
-        budget = self._budget_of(req.tenant)
-        if budget is not None and budget <= 0:
-            # a zero budget means blocked, not "one slot anyway"; reject
-            # at intake so the request cannot wedge run_until_drained
-            raise PermissionError(
-                f"tenant {req.tenant!r} has a zero slot budget")
-        req.t_submit = time.monotonic()
-        self.queue.put(req)
+    def make_state(self, slots: int, max_seq: int) -> Dict[str, Any]:
+        return {"caches": transformer.init_caches(self.cfg, slots, max_seq),
+                "cur_tok": jnp.zeros((slots, 1), jnp.int32),
+                "max_seq": max_seq}
 
-    def _budget_of(self, tenant: str) -> Optional[int]:
-        if self.tenant_budget is not None and tenant in self.tenant_budget:
-            return self.tenant_budget[tenant]
-        return self.default_tenant_budget
-
-    def _tenant_active(self) -> Dict[str, int]:
-        counts: Dict[str, int] = {}
-        for r in self.active:
-            if r is not None:
-                counts[r.tenant] = counts.get(r.tenant, 0) + 1
-        return counts
-
-    def _next_admissible(self) -> Optional[Request]:
-        """Earliest waiting request whose tenant is under budget."""
-        counts = self._tenant_active()
-        for req in self._waiting:
-            budget = self._budget_of(req.tenant)
-            if budget is None or counts.get(req.tenant, 0) < budget:
-                return req
-        return None
-
-    def _admit(self) -> None:
-        while True:                  # drain intake, keeping arrival order
-            try:
-                self._waiting.append(self.queue.get_nowait())
-            except queue.Empty:
-                break
-        for slot in range(self.slots):
-            if self.active[slot] is not None:
-                continue
-            req = self._next_admissible()
-            if req is None:
-                return
-            self._waiting.remove(req)
-            self._prefill_into_slot(slot, req)
-
-    def _prefill_into_slot(self, slot: int, req: Request) -> None:
-        """Run bucketed prefill for one request; splice its cache rows in."""
-        plen = len(req.tokens)
-        bucket = min(self.max_seq,
-                     ((plen + self.bucket - 1) // self.bucket) * self.bucket)
+    def prefill(self, tokens: np.ndarray, bucket: int) -> PrefillResult:
+        """Left-pad to `bucket`, mask the pad, RoPE at pad-relative
+        positions.  Thread-safe: runs on overlay workers in the
+        disaggregated path."""
+        plen = len(tokens)
+        pad = bucket - plen
         padded = np.zeros((1, bucket), np.int32)
-        padded[0, -plen:] = req.tokens          # left-pad: last pos = last tok
-        caches1, logits = self._prefill(self.params, {"tokens": jnp.asarray(padded)})
+        padded[0, pad:] = tokens
+        positions = jnp.asarray(np.arange(bucket, dtype=np.int32) - pad)
+        mask = jnp.asarray(np.arange(bucket) >= pad)
+        caches, logits = self._prefill(self.params, jnp.asarray(padded),
+                                       positions, mask)
+        nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
+        return PrefillResult(caches=caches, next_tok=nxt, bucket=bucket,
+                             pad=pad)
 
-        # splice: grow the single-request cache to max_seq and write slot row
+    def splice(self, state: Dict[str, Any], slot: int,
+               pre: PrefillResult) -> None:
+        """Grow the single-request cache to max_seq and write slot row."""
         grown = jax.eval_shape(
-            lambda: transformer.init_caches(self.cfg, 1, self.max_seq))
+            lambda: transformer.init_caches(self.cfg, 1, state["max_seq"]))
 
-        def splice(full, one, spec):
+        def splice_one(full, one, spec):
             pad = [(0, t - s) for s, t in zip(one.shape, spec.shape)]
             one = jnp.pad(one, pad)
             return full.at[:, slot:slot + 1].set(one)
 
-        self.caches = jax.tree.map(splice, self.caches, caches1, grown)
-        nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
-        self.cur_tok = self.cur_tok.at[slot, 0].set(nxt)
-        self.pos = self.pos.at[slot].set(bucket)
-        self.active[slot] = req
+        state["caches"] = jax.tree.map(splice_one, state["caches"],
+                                       pre.caches, grown)
+        state["cur_tok"] = state["cur_tok"].at[slot, 0].set(pre.next_tok)
+
+    def step(self, state: Dict[str, Any], pos: np.ndarray,
+             start: np.ndarray) -> np.ndarray:
+        """One decode step for the whole batch; returns the sampled
+        token per slot (the step's single device→host sync)."""
+        caches, _, nxt = self._decode(self.params, state["caches"],
+                                      state["cur_tok"],
+                                      jnp.asarray(pos), jnp.asarray(start))
+        state["caches"] = caches
+        state["cur_tok"] = nxt
+        return np.asarray(nxt[:, 0])
+
+
+class SimBackend:
+    """Modeled-cost backend for scale benchmarks: prefill/decode are
+    timed sleeps, tokens are a deterministic hash — so a 10³-user sweep
+    measures scheduling, placement and batching, not model FLOPs."""
+
+    def __init__(self, *, prefill_s: float = 1.5e-3,
+                 prefill_s_per_token: float = 0.0,
+                 step_s: float = 8e-4, vocab: int = 1024):
+        self.prefill_s = prefill_s
+        self.prefill_s_per_token = prefill_s_per_token
+        self.step_s = step_s
+        self.vocab = vocab
+
+    def make_state(self, slots: int, max_seq: int) -> Dict[str, Any]:
+        return {"tok": np.zeros(slots, np.int64), "max_seq": max_seq}
+
+    def prefill(self, tokens: np.ndarray, bucket: int) -> PrefillResult:
+        time.sleep(self.prefill_s + self.prefill_s_per_token * len(tokens))
+        nxt = int(tokens[-1]) % self.vocab if len(tokens) else 0
+        return PrefillResult(caches=None, next_tok=nxt, bucket=bucket,
+                             pad=bucket - len(tokens))
+
+    def splice(self, state, slot: int, pre: PrefillResult) -> None:
+        state["tok"][slot] = pre.next_tok
+
+    def step(self, state, pos: np.ndarray, start: np.ndarray) -> np.ndarray:
+        time.sleep(self.step_s)
+        state["tok"] = (state["tok"] * 1103515245 + 12345) % self.vocab
+        return state["tok"].copy()
+
+
+# --------------------------------------------------------------- admission
+class AdmissionControl:
+    """Picks which waiting requests join free slots this round.
+
+    ``plan`` may charge shared accounting for what it returns;
+    ``release`` undoes it when the request finishes.  The base class is
+    unconditioned FIFO."""
+
+    def plan(self, waiting: List[Request], n_free: int,
+             engine: "ServeEngine") -> List[Request]:
+        return waiting[:n_free]
+
+    def release(self, req: Request, engine: "ServeEngine") -> None:
+        pass
+
+    def admissible_ever(self, req: Request) -> bool:
+        """Intake-time rejection hook (a request that could NEVER be
+        admitted must not wedge run_until_drained)."""
+        return True
+
+
+class StaticBudgetAdmission(AdmissionControl):
+    """Per-engine slot caps by tenant (the PR-3 semantics): a tenant at
+    budget is skipped — later requests from other tenants join ahead of
+    it — so one tenant's flood cannot monopolize the batch."""
+
+    def __init__(self, tenant_budget: Optional[Dict[str, int]] = None,
+                 default_budget: Optional[int] = None):
+        self.tenant_budget = tenant_budget
+        self.default_budget = default_budget
+
+    def budget_of(self, tenant: str) -> Optional[int]:
+        if self.tenant_budget is not None and tenant in self.tenant_budget:
+            return self.tenant_budget[tenant]
+        return self.default_budget
+
+    def admissible_ever(self, req: Request) -> bool:
+        budget = self.budget_of(req.tenant)
+        return budget is None or budget > 0
+
+    def plan(self, waiting, n_free, engine):
+        counts: Dict[str, int] = {}
+        for r in engine.active:
+            if r is not None:
+                counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        chosen: List[Request] = []
+        for req in waiting:
+            if len(chosen) >= n_free:
+                break
+            budget = self.budget_of(req.tenant)
+            if budget is None or counts.get(req.tenant, 0) < budget:
+                chosen.append(req)
+                counts[req.tenant] = counts.get(req.tenant, 0) + 1
+        return chosen
+
+
+# ------------------------------------------------------------------ engine
+class ServeEngine:
+    def __init__(self, cfg: Optional[ModelConfig] = None, params=None, *,
+                 backend=None, slots: int = 4, max_seq: int = 256,
+                 prompt_bucket: int = 32,
+                 tenant_budget: Optional[Dict[str, int]] = None,
+                 default_tenant_budget: Optional[int] = None,
+                 admission: Optional[AdmissionControl] = None,
+                 name: str = "serve0"):
+        """``backend`` defaults to a :class:`ModelBackend` over
+        (cfg, params).  ``admission`` defaults to the static per-tenant
+        slot budgets (``tenant_budget`` / ``default_tenant_budget``);
+        pass a shared policy (e.g. the router's DRF admission) to
+        enforce budgets across engines.  With neither, admission is
+        strictly FIFO — exactly the pre-tenant behavior."""
+        if backend is None:
+            backend = ModelBackend(cfg, params)
+        self.backend = backend
+        self.cfg = cfg
+        self.name = name
+        self.slots = slots
+        self.max_seq = max_seq
+        self.bucket = prompt_bucket
+        self.admission = admission or StaticBudgetAdmission(
+            tenant_budget, default_tenant_budget)
+        self.queue: "queue.Queue[Tuple[Request, Optional[PrefillResult]]]" \
+            = queue.Queue()
+        # arrival-ordered admission line: one-pass deque + uid index (no
+        # list.remove scans); items are (request, optional prefill)
+        self._waiting: Deque[Tuple[Request, Optional[PrefillResult]]] = deque()
+        self._waiting_uids: set = set()
+        self.state = backend.make_state(slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)       # host-side: no device
+        self.start = np.zeros(slots, np.int32)     # syncs for bookkeeping
+        self.remaining = np.zeros(slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.outputs: Dict[int, List[int]] = {}
+        self.on_finish: Optional[Callable[[Request], None]] = None
+        self.steps = 0
+        self.admitted = 0
+        self.decoded_tokens = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        """Raw-request intake: prefill runs inline at admission time
+        (the single-pilot path)."""
+        if not self.admission.admissible_ever(req):
+            # a zero budget means blocked, not "one slot anyway"; reject
+            # at intake so the request cannot wedge run_until_drained
+            raise PermissionError(
+                f"tenant {req.tenant!r} has a zero slot budget")
+        if not req.t_submit:
+            req.t_submit = time.monotonic()
+        self.queue.put((req, None))
+
+    def submit_prefilled(self, req: Request, pre: PrefillResult) -> None:
+        """Disaggregated intake: the prompt was prefilled elsewhere
+        (router → Raptor micro-task on the compute pilot); only the
+        splice + decode run here."""
+        if not req.t_submit:
+            req.t_submit = time.monotonic()
+        self.queue.put((req, pre))
+
+    # ---------------------------------------------------------- admission
+    def _drain_intake(self) -> None:
+        while True:
+            try:
+                item = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            self._waiting.append(item)
+            self._waiting_uids.add(item[0].uid)
+
+    def _admit(self) -> None:
+        self._drain_intake()
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free or not self._waiting:
+            return
+        chosen = self.admission.plan([r for r, _ in self._waiting],
+                                     len(free), self)
+        if not chosen:
+            return
+        chosen_ids = {id(r) for r in chosen}
+        picked: Dict[int, Tuple[Request, Optional[PrefillResult]]] = {}
+        kept: Deque[Tuple[Request, Optional[PrefillResult]]] = deque()
+        for item in self._waiting:           # one O(n) pass, order kept
+            if id(item[0]) in chosen_ids:
+                picked[id(item[0])] = item
+            else:
+                kept.append(item)
+        self._waiting = kept
+        for req in chosen:
+            self._waiting_uids.discard(req.uid)
+            slot = free.pop()
+            self._place(slot, *picked[id(req)])
+
+    def _bucket_for(self, plen: int) -> int:
+        return min(self.max_seq,
+                   ((plen + self.bucket - 1) // self.bucket) * self.bucket)
+
+    def _place(self, slot: int, req: Request,
+               pre: Optional[PrefillResult]) -> None:
+        if pre is None:
+            pre = self.backend.prefill(req.tokens,
+                                       self._bucket_for(len(req.tokens)))
+        self.backend.splice(self.state, slot, pre)
+        self.pos[slot] = pre.bucket
+        self.start[slot] = pre.pad
         self.remaining[slot] = req.max_new - 1
-        self.outputs[req.uid] = [nxt]
+        self.active[slot] = req
+        self.outputs[req.uid] = [pre.next_tok]
+        self.admitted += 1
         req.t_first_token = time.monotonic()
 
     # -------------------------------------------------------------- decode
     def _step(self) -> None:
-        self.caches, _, nxt = self._decode(self.params, self.caches,
-                                           self.cur_tok, self.pos)
-        self.cur_tok = nxt
-        self.pos = self.pos + jnp.where(
-            jnp.asarray([a is not None for a in self.active]), 1, 0)
+        mask = np.array([a is not None for a in self.active])
+        if not mask.any():
+            return
+        toks = self.backend.step(self.state, self.pos, self.start)
         self.steps += 1
-        toks = np.asarray(nxt[:, 0])
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            self.outputs[req.uid].append(int(toks[slot]))
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
-                req.output = np.asarray(self.outputs.pop(req.uid), np.int32)
-                req.done = True
-                req.t_done = time.monotonic()
-                self.active[slot] = None
+        self.pos[mask] += 1
+        self.remaining[mask] -= 1
+        self.decoded_tokens += int(mask.sum())
+        finished = mask & ((self.remaining <= 0)
+                           | (self.pos >= self.max_seq - 1))
+        for slot in np.nonzero(mask)[0]:
+            self.outputs[self.active[slot].uid].append(int(toks[slot]))
+        for slot in np.nonzero(finished)[0]:
+            self._finish(int(slot))
+
+    def _finish(self, slot: int) -> None:
+        req = self.active[slot]
+        req.output = np.asarray(self.outputs.pop(req.uid), np.int32)
+        req.done = True
+        req.t_done = time.monotonic()
+        self.active[slot] = None
+        self.admission.release(req, self)
+        cb = self.on_finish
+        if cb is not None:
+            cb(req)
 
     # ----------------------------------------------------------------- run
-    def run_until_drained(self, timeout_s: float = 300.0) -> int:
-        """Serve until queue + slots are empty. Returns decode steps run."""
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self.active)
+
+    @property
+    def backlog(self) -> int:
+        """Requests not yet decoding — the engine's pressure signal."""
+        return self.queue.qsize() + len(self._waiting)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Heartbeat export (status["serve"])."""
+        return {"name": self.name, "slots": self.slots,
+                "active": self.n_active, "waiting": self.backlog,
+                "steps": self.steps, "admitted": self.admitted,
+                "decoded_tokens": self.decoded_tokens}
+
+    def _idle_wait(self, timeout: float) -> None:
+        """Block on intake instead of busy-spinning when slots are empty."""
+        try:
+            item = self.queue.get(timeout=max(timeout, 1e-3))
+        except queue.Empty:
+            return
+        self._waiting.append(item)
+        self._waiting_uids.add(item[0].uid)
+
+    def _drain_diagnostic(self, timeout_s: float) -> str:
+        self._drain_intake()
+        by_tenant: Dict[str, List[int]] = {}
+        for req, _ in self._waiting:
+            by_tenant.setdefault(req.tenant, []).append(req.uid)
+        waiting = "; ".join(
+            f"tenant {t!r}: {len(uids)} waiting (uids {uids[:8]})"
+            for t, uids in sorted(by_tenant.items())) or "none"
+        running = [f"{r.tenant}/{r.uid}" for r in self.active
+                   if r is not None]
+        return (f"serve engine {self.name!r}: queue not drained after "
+                f"{timeout_s:.0f}s — waiting: {waiting}; "
+                f"active slots: {running or 'none'}")
+
+    def run_until_drained(self, timeout_s: float = 300.0,
+                          idle_wait_s: float = 0.02) -> int:
+        """Serve until queue + slots are empty. Returns decode steps run.
+
+        On timeout the error names the tenants/requests still waiting —
+        a tenant whose budget can never clear shows up by name instead
+        of as a bare TimeoutError."""
         t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout_s:
+        while True:
             self._admit()
-            if not any(a is not None for a in self.active):
-                if self.queue.empty() and not self._waiting:
-                    return self.steps
-                continue
-            self._step()
-        raise TimeoutError("serve queue not drained")
+            if self.n_active:
+                self._step()
+            elif self.queue.empty() and not self._waiting:
+                return self.steps
+            else:
+                self._idle_wait(min(idle_wait_s,
+                                    timeout_s - (time.monotonic() - t0)))
+            if time.monotonic() - t0 >= timeout_s:
+                raise TimeoutError(self._drain_diagnostic(timeout_s))
+
+    def run_forever(self, stop: threading.Event,
+                    idle_wait_s: float = 0.01) -> int:
+        """Long-lived serve loop (the gang-CU body in the disaggregated
+        deployment): decode while slots are active, block briefly on
+        intake otherwise, exit when `stop` is set."""
+        while not stop.is_set():
+            self._admit()
+            if self.n_active:
+                self._step()
+            else:
+                self._idle_wait(idle_wait_s)
+        return self.steps

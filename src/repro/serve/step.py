@@ -3,6 +3,12 @@
 ``decode`` is the unit lowered for the ``decode_*`` / ``long_*`` cells:
 one new token for the whole batch against a seq_len-deep cache, with the
 cache donated (in-place ring-buffer update on real hardware).
+
+Both steps understand bucketed (left-padded) prompts: the prefill batch
+may carry ``positions`` (pad-relative RoPE positions) and ``pad_mask``
+(False on pad key slots), and the decode step takes an optional ``start``
+vector marking the first real cache slot per row. See
+``transformer.prefill`` for the bit-identity argument.
 """
 from __future__ import annotations
 
@@ -20,17 +26,20 @@ def make_prefill_step(cfg: ModelConfig, *, moe_groups: int = 1,
     def prefill_step(params, batch):
         caches, logits = transformer.prefill(cfg, params, batch,
                                              moe_groups=moe_groups,
-                                             moe_ep_axis=moe_ep_axis)
+                                             moe_ep_axis=moe_ep_axis,
+                                             positions=batch.get("positions"),
+                                             pad_mask=batch.get("pad_mask"))
         return caches, logits
     return prefill_step
 
 
 def make_decode_step(cfg: ModelConfig, *, sample: bool = False,
                      moe_groups: int = 1, moe_ep_axis=None):
-    def decode_step(params, caches, tokens, pos):
+    def decode_step(params, caches, tokens, pos, start=None):
         caches, logits = transformer.decode_step(cfg, params, caches, tokens, pos,
                                                  moe_groups=moe_groups,
-                                                 moe_ep_axis=moe_ep_axis)
+                                                 moe_ep_axis=moe_ep_axis,
+                                                 start=start)
         if sample:
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return caches, logits, nxt[:, None]

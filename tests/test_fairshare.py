@@ -481,13 +481,11 @@ def test_session_tenant_context_tags_and_limits_stages():
 # ------------------------------------------------- serve tenant budgets
 def _engine_stub(slots=4, tenant_budget=None, default_budget=None):
     """ServeEngine admission state without the model machinery."""
-    from repro.serve.engine import ServeEngine
+    from repro.serve.engine import ServeEngine, StaticBudgetAdmission
     eng = object.__new__(ServeEngine)
     eng.slots = slots
-    eng.tenant_budget = tenant_budget
-    eng.default_tenant_budget = default_budget
+    eng.admission = StaticBudgetAdmission(tenant_budget, default_budget)
     eng.active = [None] * slots
-    eng._waiting = []
     return eng
 
 
@@ -498,18 +496,18 @@ def test_serve_engine_tenant_budget_skips_flooding_tenant():
     a = [Request(uid=i, tokens=toks, tenant="a") for i in range(3)]
     b = Request(uid=9, tokens=toks, tenant="b")
     eng = _engine_stub(tenant_budget={"a": 2})
-    eng._waiting = a + [b]
+    waiting = a + [b]
     # a fills up to its budget, then b jumps its third request
     picked = []
     for _ in range(3):
-        req = eng._next_admissible()
+        (req,) = eng.admission.plan(waiting, 1, eng)
         picked.append(req)
-        eng._waiting.remove(req)
+        waiting.remove(req)
         eng.active[eng.active.index(None)] = req
     assert picked == [a[0], a[1], b]
-    assert eng._next_admissible() is None      # a's last waits for a slot
+    assert eng.admission.plan(waiting, 1, eng) == []   # a's last waits
     eng.active[0] = None                       # one a-slot frees up
-    assert eng._next_admissible() is a[2]
+    assert eng.admission.plan(waiting, 1, eng) == [a[2]]
 
 
 def test_serve_engine_no_budget_is_strict_fifo():
@@ -518,8 +516,7 @@ def test_serve_engine_no_budget_is_strict_fifo():
     toks = np.zeros(4, np.int32)
     reqs = [Request(uid=i, tokens=toks, tenant="a") for i in range(4)]
     eng = _engine_stub(slots=2)
-    eng._waiting = list(reqs)
-    assert eng._next_admissible() is reqs[0]
+    assert eng.admission.plan(list(reqs), 2, eng) == reqs[:2]
 
 
 def test_serve_engine_zero_budget_rejects_at_intake():

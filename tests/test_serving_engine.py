@@ -1,4 +1,7 @@
-"""Continuous-batching engine + scheduler preemption/heartbeat tests."""
+"""Continuous-batching engine + scheduler preemption/heartbeat tests,
+plus the disaggregated prefill/decode path: pad-mask bit-identity,
+KV-page ledgering, locality-first routing, fleet-wide DRF budgets and
+cold-page spool/restore."""
 import time
 
 import jax
@@ -8,8 +11,14 @@ import pytest
 from repro import configs
 from repro.core import (ComputeUnitDescription, PilotDescription, PilotManager,
                         ResourceManager)
+from repro.core.control_plane import ControlPlane
+from repro.core.dataplane import (DataPlane, GFS_ARCHIVE, Link,
+                                  TransferCostModel)
+from repro.core.queues import QueueConfig
+from repro.core.session import Session
 from repro.models import transformer
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, SimBackend
+from repro.serve.kv_pages import KVPageManager
 
 
 def test_continuous_batching_serves_all_and_matches_sequential():
@@ -31,6 +40,196 @@ def test_continuous_batching_serves_all_and_matches_sequential():
     assert steps < sum(r.max_new for r in reqs)
     # latency bookkeeping
     assert all(r.t_done >= r.t_first_token >= r.t_submit for r in reqs)
+
+
+def test_bucketed_prefill_matches_unpadded_bitwise():
+    """Left-padding must be invisible: with the pad mask + pad-relative
+    RoPE in prefill and the per-slot `start` vector in decode, a
+    bucket-padded prompt produces the SAME tokens as the unpadded run
+    (bit-identical — masked keys contribute exact zeros, no tolerance
+    needed)."""
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,), dtype=np.int32)
+               for n in (5, 9, 12)]
+
+    def serve(bucket):
+        eng = ServeEngine(cfg, params, slots=2, max_seq=64,
+                          prompt_bucket=bucket)
+        reqs = [Request(uid=i, tokens=p, max_new=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return [r.output for r in reqs]
+
+    padded = serve(16)    # every prompt left-padded up to 16
+    exact = serve(1)      # bucket == prompt length: no padding at all
+    for a, b in zip(padded, exact):
+        assert np.array_equal(a, b), (a, b)
+
+
+def _two_pilot_plane():
+    data = DataPlane(cost_model=TransferCostModel())
+    return data, "pilot-a", "pilot-b"
+
+
+def test_kv_page_transfer_is_ledgered():
+    """A cross-pilot splice ships exactly the non-resident page bytes
+    over DCN under reason ``kv-splice`` and re-homes the pages; a
+    same-pilot splice is the short-circuit read (0 wire bytes)."""
+    data, a, b = _two_pilot_plane()
+    kv = KVPageManager(data, page_tokens=8, bytes_per_token=100,
+                       fixed_bytes=40)
+    lease = kv.alloc(7, 20, a)          # 3 pages: 2400 + 40 fixed
+    assert lease.nbytes == 3 * 8 * 100 + 40
+    assert kv.resident_pilot(7) == a
+    wire = kv.splice_to(7, b)
+    assert wire == lease.nbytes
+    assert kv.resident_pilot(7) == b
+    assert data.ledger()["by_reason"]["kv-splice"] == lease.nbytes
+    assert data.ledger()["by_link"][Link.DCN] == lease.nbytes
+    # decode stays where the cache lives: free splice, nothing ledgered
+    assert kv.splice_to(7, b) == 0
+    assert kv.stats["local_splices"] == 1
+    assert data.ledger()["by_reason"]["kv-splice"] == lease.nbytes
+    kv.free(7)
+    assert kv.lease(7) is None and lease.pages[0] not in data
+
+
+def test_kv_spool_restore_round_trip():
+    """Cold pages park on the archive tier and promote back intact."""
+    data, a, b = _two_pilot_plane()
+    kv = KVPageManager(data, page_tokens=4, bytes_per_token=50)
+    lease = kv.alloc(3, 8, a)
+    spooled = kv.spool(3)
+    assert spooled == lease.nbytes and kv.lease(3).spooled
+    assert kv.resident_pilot(3) is None          # archive only
+    assert GFS_ARCHIVE in data.home_pilots(lease.pages[0])
+    assert data.ledger()["by_reason"]["kv-spool"] == lease.nbytes
+    restored = kv.restore(3, b)
+    assert restored == lease.nbytes and not kv.lease(3).spooled
+    assert kv.resident_pilot(3) == b
+    assert data.ledger()["by_reason"]["kv-restore"] == lease.nbytes
+
+
+def _serve_session():
+    rm = ResourceManager(devices=jax.devices() * 6)
+    s = Session(rm, cost_model=TransferCostModel())
+    for name in ("d0", "d1", "pf"):
+        s.add_pilot(PilotDescription(n_chips=2, name=name,
+                                     enable_speculation=False))
+    return s
+
+
+def _run_pool(sess, router, n=12, max_new=4, tenant="t"):
+    reqs = [Request(uid=i, tokens=np.arange(4 + i % 5), max_new=max_new,
+                    tenant=tenant) for i in range(n)]
+    for r in reqs:
+        router.submit(r)
+    router.drain(timeout_s=60)
+    assert all(r.done and len(r.output) == max_new for r in reqs)
+    return reqs
+
+
+def test_router_prefers_kv_locality_when_dcn_expensive():
+    """KV pages home on the prefill pilot; with DCN expensive, dispatch
+    lands every decode on that pilot's engine (all local splices) even
+    though a second engine sits idle."""
+    sess = _serve_session()
+    sess.cost_model.dcn_cost_per_byte = 1e-3    # movement >> locality/load
+    try:
+        router = sess.serve_pool(
+            lambda: SimBackend(prefill_s=1e-3, step_s=2e-4),
+            slots=2, max_seq=32, prompt_bucket=8,
+            decode_pilots=["pf", "d1"], prefill_pilot="pf",
+            bytes_per_token=1 << 10)
+        _run_pool(sess, router, n=10)
+        snap = router.snapshot()
+        assert snap["cross_pilot"] == 0
+        assert snap["kv"]["local_splices"] == 10
+        assert sess.dataplane.ledger()["by_reason"].get("kv-splice", 0) == 0
+    finally:
+        sess.shutdown()
+
+
+def test_router_spills_across_pilots_when_dcn_free():
+    """With movement ~free and the local engine saturated, the load term
+    wins: some decodes ship their KV to the other pilot — and every one
+    of those shipments is on the byte ledger."""
+    sess = _serve_session()
+    sess.cost_model.dcn_cost_per_byte = 1e-15
+    try:
+        router = sess.serve_pool(
+            lambda: SimBackend(prefill_s=5e-4, step_s=2e-3),
+            slots=1, max_seq=32, prompt_bucket=8,
+            decode_pilots=["pf", "d1"], prefill_pilot="pf",
+            bytes_per_token=1 << 10, load_weight=4.0)
+        _run_pool(sess, router, n=10, max_new=6)
+        snap = router.snapshot()
+        assert snap["cross_pilot"] > 0
+        assert (sess.dataplane.ledger()["by_reason"]["kv-splice"]
+                == snap["splice_bytes"] > 0)
+        # both engines actually decoded
+        assert all(e["admitted"] > 0 for e in snap["engines"])
+    finally:
+        sess.shutdown()
+
+
+def test_drf_budget_binds_across_engines():
+    """One QueueTree backs admission for ALL engines: a flooding tenant
+    capped at max_chips=2 never holds more than 2 decode slots
+    fleet-wide (4 slots exist), while the small tenant drains freely."""
+    sess = _serve_session()
+    try:
+        router = sess.serve_pool(
+            lambda: SimBackend(prefill_s=2e-4, step_s=1e-3),
+            slots=2, max_seq=32, prompt_bucket=8,
+            decode_pilots=["d0", "d1"], prefill_pilot="pf",
+            bytes_per_token=1 << 10,
+            queue_configs=[QueueConfig("flood", max_chips=2),
+                           QueueConfig("small")])
+        reqs = [Request(uid=i, tokens=np.arange(5), max_new=5,
+                        tenant="flood" if i < 16 else "small")
+                for i in range(22)]
+        for r in reqs:
+            router.submit(r)
+        router.drain(timeout_s=60)
+        assert all(r.done for r in reqs)
+        assert router.admission.peak_slots["flood"] <= 2
+        assert router.admission.peak_slots["small"] >= 1
+        # a zero budget rejects at intake instead of wedging the drain
+        tree = router.admission.tree
+        tree.queues["blocked"] = type(tree.queues["flood"])(
+            QueueConfig("blocked", max_chips=0))
+        with pytest.raises(PermissionError):
+            router.submit(Request(uid=99, tokens=np.arange(3),
+                                  tenant="blocked"))
+    finally:
+        sess.shutdown()
+
+
+def test_serve_backlog_feeds_heartbeat_and_pressure():
+    """Engine occupancy rides the agent heartbeat and the ControlPlane
+    folds waiting requests into pilot pressure."""
+    hb = {"n_slots": 4, "queued_chip_demand": 0, "busy_chips": 0,
+          "serve": {"e0": {"waiting": 8}}}
+    assert ControlPlane.pressure_of(hb) == pytest.approx(
+        ControlPlane.SERVE_BACKLOG_WEIGHT * 8 / 4)
+    sess = _serve_session()
+    try:
+        router = sess.serve_pool(
+            lambda: SimBackend(prefill_s=1e-4, step_s=5e-4),
+            slots=2, max_seq=32, prompt_bucket=8,
+            decode_pilots=["d0"], prefill_pilot="pf",
+            bytes_per_token=1 << 10)
+        _run_pool(sess, router, n=6)
+        st = sess.pilots["d0"].agent.heartbeat()
+        (snap,) = st["serve"].values()
+        assert snap["admitted"] == 6 and snap["decoded_tokens"] > 0
+    finally:
+        sess.shutdown()
 
 
 def test_preemption_evicts_lower_priority():

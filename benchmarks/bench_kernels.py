@@ -3,9 +3,13 @@
 On the CPU container interpret-mode timings are NOT TPU-indicative — the
 point of these rows is regression tracking of the wrapper overheads and
 a correctness-at-size spot check; TPU timing comes from the roofline.
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -15,7 +19,10 @@ import numpy as np
 
 
 def _time(fn, *args, reps: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    # warm up (compile) and block on EVERY output shape — the old
+    # tuple-only block let single-array outputs start the clock with
+    # the compile still in flight
+    jax.block_until_ready(fn(*args))
     t0 = time.monotonic()
     for _ in range(reps):
         out = fn(*args)
@@ -23,7 +30,7 @@ def _time(fn, *args, reps: int = 3) -> float:
     return (time.monotonic() - t0) / reps
 
 
-def run() -> List[Dict]:
+def run(reps: int = 3) -> List[Dict]:
     rows = []
     rng = np.random.default_rng(0)
 
@@ -33,7 +40,7 @@ def run() -> List[Dict]:
     c = jnp.asarray(rng.normal(size=(64, 3)).astype(np.float32))
     for name, fn in (("pallas", km_ops.assign),
                      ("ref", jax.jit(km_ref.assign))):
-        dt = _time(fn, p, c)
+        dt = _time(fn, p, c, reps=reps)
         rows.append({"name": f"kernels/kmeans_assign_8192x64/{name}",
                      "us_per_call": dt * 1e6, "derived": ""})
 
@@ -42,7 +49,7 @@ def run() -> List[Dict]:
     q = jnp.asarray(rng.normal(size=(1, 1024, 4, 64)).astype(np.float32))
     for name, fn in (("pallas", lambda a: fa_ops.attention(a, a, a)),
                      ("ref", jax.jit(lambda a: fa_ref.attention(a, a, a)))):
-        dt = _time(fn, q)
+        dt = _time(fn, q, reps=reps)
         rows.append({"name": f"kernels/flash_attn_1k/{name}",
                      "us_per_call": dt * 1e6, "derived": ""})
 
@@ -55,7 +62,31 @@ def run() -> List[Dict]:
     h0 = jnp.zeros((B, di, st), jnp.float32)
     for name, fn in (("pallas", lambda *xs: ms_ops.scan(*xs, bdi=64, bs=16)),
                      ("ref", jax.jit(ms_ref.scan))):
-        dt = _time(fn, a, b, C, h0)
+        dt = _time(fn, a, b, C, h0, reps=reps)
         rows.append({"name": f"kernels/mamba_scan_256/{name}",
                      "us_per_call": dt * 1e6, "derived": ""})
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer reps for CI; also writes --json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default "
+                         "BENCH_kernels.json with --smoke)")
+    args = ap.parse_args()
+    rows = run(reps=2 if args.smoke else 3)
+    json_path = args.json or ("BENCH_kernels.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": rows}, f, indent=2)
+        print(f"wrote {json_path}")
+    print(f"{'row':<42} {'us/call':>12}")
+    print("-" * 55)
+    for r in rows:
+        print(f"{r['name']:<42} {r['us_per_call']:>12.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.
   staging   — async prefetch + replica cache vs synchronous staging
   serve     — disaggregated prefill/decode serving vs static engine
   kernels   — Pallas kernel micro-benchmarks vs jnp reference
+  autotune  — tuned vs default block configs + roofline placement split
   roofline  — per-(arch x shape x mesh) roofline terms from the dry-run
 """
 from __future__ import annotations
@@ -24,11 +25,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
                              "fairshare", "dispatch", "staging", "serve", "kernels",
-                             "roofline"])
+                             "autotune", "roofline"])
     args = ap.parse_args()
 
-    from benchmarks import (bench_dispatch, bench_elastic, bench_fairshare,
-                            bench_kernels, bench_session_placement,
+    from benchmarks import (bench_autotune, bench_dispatch, bench_elastic,
+                            bench_fairshare, bench_kernels,
+                            bench_session_placement,
                             bench_serve_scale, bench_staging,
                             fig5_overheads, fig6_kmeans,
                             roofline_table)
@@ -42,6 +44,7 @@ def main() -> None:
         "staging": bench_staging.run,
         "serve": bench_serve_scale.run,
         "kernels": bench_kernels.run,
+        "autotune": bench_autotune.run,
         "roofline": roofline_table.run,
     }
     print("name,us_per_call,derived")

@@ -19,7 +19,7 @@ from .queues import (CapacityPolicy, DrfPolicy, FifoPolicy,  # noqa: F401
 from .raptor import MicroTask, RaptorMaster  # noqa: F401
 from .resource_manager import ResourceManager  # noqa: F401
 from .scheduler import YarnStyleScheduler  # noqa: F401
-from .session import (Session, Stage, TenantContext,  # noqa: F401
+from .session import (Session, Stage, StageCost, TenantContext,  # noqa: F401
                       analytics_stage, hpc_stage)
 from .staging import (DataRef, Prefetcher, ReplicaCache,  # noqa: F401
                       StageRequest, StageState)

@@ -70,6 +70,13 @@ class Agent:
         self._thread: Optional[threading.Thread] = None
         self._cus: Dict[str, ComputeUnit] = {}
         self._ema: Dict[str, float] = {}         # tag -> runtime EMA
+        # roofline estimate-vs-actual cross-check: the Session reports
+        # each placed stage's (est_s, actual_s) pair here; the EMA of
+        # the actual/est ratio and the last sample ride the heartbeat
+        # so the ControlPlane can observe cost-model drift per pilot
+        self._est_n = 0
+        self._est_ema_ratio: Optional[float] = None
+        self._est_last: Dict[str, Any] = {}
         self._executor_cache: Dict[Any, Any] = {}
         self.enable_speculation = enable_speculation
         self.status: Dict[str, Any] = {}
@@ -173,6 +180,29 @@ class Agent:
         with self._lock:
             return list(self._serves.values())
 
+    # ------------------------------------------------- roofline cross-check
+    def record_estimate(self, tag: str, est_s: float,
+                        actual_s: float) -> None:
+        """Fold one roofline estimate-vs-actual sample (a placed stage
+        that ran here) into the pilot's drift stats.  The per-tag EMA
+        runtime (:meth:`_record_runtime`) tracks the same actuals from
+        the CU side; this pairs them with the *predicted* time."""
+        ratio = actual_s / max(est_s, 1e-12)
+        with self._lock:
+            self._est_n += 1
+            self._est_ema_ratio = (ratio if self._est_ema_ratio is None
+                                   else 0.7 * self._est_ema_ratio
+                                   + 0.3 * ratio)
+            self._est_last = {"tag": tag, "est_s": est_s,
+                              "actual_s": actual_s, "ratio": ratio}
+        self._status_version = -1     # next heartbeat must re-snapshot
+
+    def estimate_calibration(self) -> Optional[float]:
+        """EMA actual/estimate ratio (None before the first sample) —
+        an opt-in multiplier for the Session's est_runtime term."""
+        with self._lock:
+            return self._est_ema_ratio
+
     def reserve_chips(self, n: int, *, tenant: Optional[str] = None,
                       queue: Optional[str] = None) -> List[int]:
         """Take n chips out of the slot table (Mode-I analytics carve-out).
@@ -236,6 +266,9 @@ class Agent:
             for cu in self._cus.values():
                 states[cu.state.value] = states.get(cu.state.value, 0) + 1
             ema = dict(self._ema)
+            roofline = {"n": self._est_n,
+                        "ema_error_ratio": self._est_ema_ratio,
+                        "last": dict(self._est_last)}
         backlog = self.scheduler.backlog()
         self.status = {
             "t": now,
@@ -248,6 +281,9 @@ class Agent:
             "guarantee_floor": backlog["guarantee_floor"],
             "queue_backlog": backlog["queues"],
             "ema_runtimes": ema,
+            # estimate-vs-actual drift of the roofline placement model
+            # on this pilot (Session.record via record_estimate)
+            "roofline": roofline,
             "cu_states": states,
             "scheduler": dict(self.scheduler.stats),
             # overlay pressure (pending depth, EMA micro-task runtimes,

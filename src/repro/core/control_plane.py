@@ -34,6 +34,7 @@ Run :meth:`start` for an autonomous polling loop, or call
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Any, Dict, List, Optional
@@ -115,14 +116,27 @@ class ControlPlane:
                        + qb.get("chips_used", 0)) / slots
                 for name, qb in hb.get("queue_backlog", {}).items()}
 
+    @staticmethod
+    def estimate_drift(hb: Dict[str, Any]) -> Optional[float]:
+        """How far the roofline placement model is off on this pilot:
+        |log(EMA actual/estimate)| from the heartbeat's cross-check
+        samples — 0.0 is a perfect model, ~0.7 is a 2x miss either way.
+        None when the pilot has not run a cost-carrying stage yet."""
+        ratio = hb.get("roofline", {}).get("ema_error_ratio")
+        if ratio is None or ratio <= 0:
+            return None
+        return abs(math.log(ratio))
+
     def poll(self) -> Dict[str, Dict[str, Any]]:
         """Fresh heartbeat + pressure per active pilot (keyed by uid),
-        with the per-queue pressure breakdown."""
+        with the per-queue pressure breakdown and the roofline
+        estimate-drift cross-check."""
         out = {}
         for p in self._active_pilots():
             hb = p.agent.heartbeat()
             out[p.uid] = {**hb, "pressure": self.pressure_of(hb),
                           "queue_pressure": self.queue_pressures(hb),
+                          "est_drift": self.estimate_drift(hb),
                           "pilot": p, "name": p.desc.name}
         return out
 

@@ -52,6 +52,12 @@ class PilotDescription:
     app_master_overhead_s: float = 0.0
     n_spawners: Optional[int] = None  # executor threads (None: auto-size)
     enable_speculation: bool = True
+    # advertised per-chip speeds (defaults: TPU v5e, roofline.terms.HW).
+    # The Session placer turns a stage's StageCost into a roofline
+    # est_runtime on THIS pilot from these two numbers — heterogeneous
+    # pilots (HPC vs analytics partitions) advertise different ones.
+    peak_flops_per_chip: float = 197e12   # FLOP/s
+    hbm_bw_per_chip: float = 819e9        # B/s
     scheduler_policy: Any = "fifo"    # 'fifo' | 'capacity' | 'drf' | instance
     queues: Optional[Sequence] = None  # QueueConfigs for the tenant queues
     # tiered staging pipeline (paper: data-staging to/from HDFS around

@@ -17,11 +17,19 @@ pilots:
   * a **placer** scores each ready stage on every compatible pilot as
 
         affinity + locality_score − movement_cost(bytes, link)
+                 − est_runtime(cost, pilot)
 
     where affinity is the consolidation pull toward a native-runtime
-    pilot, locality is the DataPlane's byte-weighted replica score, and
+    pilot, locality is the DataPlane's byte-weighted replica score,
     movement_cost prices the non-resident bytes over the inter-pilot
-    DCN link.  The stage then either runs where its data lives (an
+    DCN link, and est_runtime is the roofline ``max(compute, memory)``
+    time of the stage's (optional) :class:`~repro.roofline.placement.
+    StageCost` on that pilot's advertised per-chip peak FLOP/s + HBM
+    bandwidth — so a compute-bound stage and a memory-bound stage with
+    identical bytes land on *different* pilots.  After each run the
+    estimate is cross-checked against the actual wall time (and the
+    agent's EMA runtimes); the error rides the pilot heartbeat so
+    model drift is observable from the ControlPlane.  The stage then either runs where its data lives (an
     analytics stage on an HPC pilot carves a Mode-I cluster) or the
     data moves — the paper's Fig-8 local-disk-vs-Lustre trade-off as a
     first-class, queryable runtime decision (``session.placements``).
@@ -31,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -45,6 +54,7 @@ from .dataplane import (DataPlane, Lineage, Link, TransferCostModel,
 from .pilot import Pilot, PilotDescription, PilotManager
 from .resource_manager import ResourceManager
 from .staging import DataRef, as_refs
+from repro.roofline.placement import StageCost, est_runtime, estimate_error
 
 HPC = "hpc"
 ANALYTICS = "analytics"
@@ -79,6 +89,11 @@ class Stage:
     # ``inputs`` are staged in addition.
     stage_in: Tuple = ()
     stage_out: Tuple = ()
+    # optional roofline cost descriptor (global FLOPs + HBM bytes, or
+    # StageCost.from_model(cfg, shape, ...)): the placer converts it to
+    # an est_runtime on each candidate pilot's advertised speeds and
+    # subtracts it from the score.  None: byte-only scoring (legacy).
+    cost: Optional[StageCost] = None
 
 
 def hpc_stage(name: str, fn: Callable, **kw) -> Stage:
@@ -139,13 +154,24 @@ class TenantContext:
 class Session:
     def __init__(self, rm: Optional[ResourceManager] = None, *,
                  cost_model: Optional[TransferCostModel] = None,
-                 prefetch: bool = False):
+                 prefetch: bool = False,
+                 roofline_placement: bool = True,
+                 calibrate_estimates: bool = False):
         self.cost_model = cost_model or TransferCostModel()
         self.dataplane = DataPlane(cost_model=self.cost_model)
         # prefetch=True routes stage inputs through each pilot's async
         # staging pipeline (placement-time enqueue, delay scheduling)
         # instead of the synchronous move in _ensure_inputs_on
         self.prefetch = prefetch
+        # roofline_placement=False drops the est_runtime term (byte-only
+        # scoring — the on/off arm of bench_autotune); stages carrying
+        # no StageCost are byte-only either way.  calibrate_estimates
+        # additionally multiplies each pilot's est_runtime by that
+        # pilot's observed EMA actual/estimate ratio — off by default:
+        # the error is always EXPORTED (heartbeats + placements), it is
+        # only APPLIED on request.
+        self.roofline_placement = roofline_placement
+        self.calibrate_estimates = calibrate_estimates
         self.pm = PilotManager(rm)
         self.control_plane = self.pm.control_plane  # elastic rebalancing
         self.pilots: Dict[str, Pilot] = {}          # pilot name -> Pilot
@@ -344,9 +370,28 @@ class Session:
         move = self.cost_model.movement_cost(nbytes, Link.DCN)
         affinity = (self.cost_model.runtime_affinity
                     if pilot.desc.runtime == stage.kind else 0.0)
-        return {"locality": loc, "bytes_to_move": float(nbytes),
-                "movement_cost": move, "affinity": affinity,
-                "total": affinity + loc - move}
+        entry = {"locality": loc, "bytes_to_move": float(nbytes),
+                 "movement_cost": move, "affinity": affinity,
+                 "total": affinity + loc - move}
+        if stage.cost is not None and self.roofline_placement:
+            # roofline term: the stage's FLOPs/HBM bytes over the chips
+            # it would hold on THIS pilot, at this pilot's advertised
+            # speeds.  Seconds, same unit movement_cost already uses.
+            n = stage.n_chips or max(self._effective_chips(pilot), 1)
+            rt = est_runtime(stage.cost, n_chips=n,
+                             peak_flops=pilot.desc.peak_flops_per_chip,
+                             hbm_bw=pilot.desc.hbm_bw_per_chip)
+            est = rt["est_s"]
+            if self.calibrate_estimates:
+                ratio = pilot.agent.estimate_calibration()
+                if ratio is not None:
+                    est *= ratio
+                    entry["calibration_ratio"] = ratio
+            entry.update({"compute_s": rt["compute_s"],
+                          "memory_s": rt["memory_s"],
+                          "bound": rt["bound"], "est_runtime": est})
+            entry["total"] -= est
+        return entry
 
     def _effective_chips(self, pilot: Pilot) -> int:
         """Capacity the placer may count on: the pilot's slice minus any
@@ -529,12 +574,15 @@ class Session:
                 decision["queue"] = stage.queue
             if staging is None:
                 self._ensure_inputs_on(stage, pilot, decision)
+            t_run = time.monotonic()
             if stage.kind == HPC:
                 result = self._run_hpc(stage, pilot, timeout,
                                        staging=staging)
             else:
                 result = self._run_analytics(stage, pilot, decision, timeout,
                                              staging=staging)
+            self._cross_check_estimate(stage, pilot, decision,
+                                       time.monotonic() - t_run)
             if staging is not None:
                 decision["dcn_bytes_moved"] = sum(r.wire_bytes
                                                   for r in staging)
@@ -575,6 +623,24 @@ class Session:
                         reason=f"stage:{stage.name}")
                     moved += nbytes
         decision["dcn_bytes_moved"] = moved
+
+    def _cross_check_estimate(self, stage: Stage, pilot: Pilot,
+                              decision: Dict[str, Any],
+                              actual_s: float) -> None:
+        """Close the roofline loop: compare the chosen pilot's
+        est_runtime against the measured stage wall time (which the
+        agent's per-tag EMA also tracks), record both in the placement
+        decision, and push the error onto the agent so it rides the
+        pilot's heartbeat — ControlPlane polls see model drift."""
+        est = decision.get("chosen", {}).get("est_runtime")
+        if est is None:
+            return
+        decision["est_runtime_s"] = est
+        decision["actual_runtime_s"] = actual_s
+        err = estimate_error(est, actual_s)
+        if err is not None:
+            decision["est_error_ratio"] = err
+        pilot.agent.record_estimate(f"stage:{stage.name}", est, actual_s)
 
     def _call_kwargs(self, stage: Stage, extra: Dict[str, Any]) -> Dict[str, Any]:
         kwargs = {n: self.dataplane.get(n).array for n in stage.inputs}

@@ -1,13 +1,14 @@
-"""Public jit'd wrapper for the K-Means assignment kernel."""
+"""Public wrapper for the K-Means assignment kernel (autotuned blocks)."""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 import repro.kernels as K
+from repro.kernels import autotune
 from . import kmeans as kernel
 
 _PAD_VALUE = 1e8  # padded centroids land far away from every point
@@ -33,9 +34,23 @@ def _assign(points, centroids, bn: int, bk: int):
     return idx[:n], mind
 
 
-def assign(points: jax.Array, centroids: jax.Array, *, bn: int = 1024,
-           bk: int = 512) -> Tuple[jax.Array, jax.Array]:
+def resolve_blocks(n: int, k: int, d: int, dtype,
+                   bn: Optional[int], bk: Optional[int]):
+    """Block sizes for assignment: explicit args win, else the autotune
+    registry, else the legacy 1024/512 (capped to the padded extents)."""
+    if bn is None or bk is None:
+        tuned = autotune.lookup("kmeans", {"n": n, "k": k, "d": d}, dtype) \
+            or autotune.DEFAULTS["kmeans"]
+        bn = bn if bn is not None else tuned["bn"]
+        bk = bk if bk is not None else tuned["bk"]
+    return min(bn, _round_up(n, 8)), min(bk, _round_up(k, 8))
+
+
+def assign(points: jax.Array, centroids: jax.Array, *,
+           bn: Optional[int] = None,
+           bk: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment via the Pallas kernel (padded + jit)."""
-    bn = min(bn, _round_up(points.shape[0], 8))
-    bk = min(bk, _round_up(centroids.shape[0], 8))
+    n, d = points.shape
+    k = centroids.shape[0]
+    bn, bk = resolve_blocks(n, k, d, points.dtype, bn, bk)
     return _assign(points, centroids, bn, bk)

@@ -1,7 +1,8 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-# ^ MUST precede any jax import: device count locks at first backend init.
+from repro.launch import platform as _platform
+_platform.configure()
+# ^ MUST precede any jax import: XLA flags lock at first backend init.
 import argparse
 import dataclasses
 import json

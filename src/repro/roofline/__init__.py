@@ -1,2 +1,3 @@
 from .hlo import collective_bytes_per_device  # noqa: F401
+from .placement import StageCost, est_runtime, estimate_error  # noqa: F401
 from .terms import HW, roofline_terms  # noqa: F401

@@ -1,0 +1,296 @@
+"""Chaos benchmark: goodput and MTTR under injected failures + resume.
+
+The robustness claim of the fault-tolerance layer, measured.  Two arms:
+
+**Churn** — two pilots share a slot pool under a steady 1-chip CU load
+while a seeded :class:`~repro.core.chaos.FailureInjector` kills chips at
+a rate and takes a whole pilot down mid-run (trace-driven, so the smoke
+arm replays exactly).  The ControlPlane's heartbeat deadline detects the
+death, requeues the victim's CUs onto the survivor (clone chains) and
+regrants the reclaimed chips.  Reported per failure rate: makespan,
+goodput (completed CUs/s), kills by kind, MTTR (kill -> recovery-complete
+from the injector/ControlPlane event pairing), and the lost-stage count —
+whose floor is ZERO: every submitted CU resolves exactly once.
+
+**Resume** — a Session journals its DAG to a checkpoint directory; the
+run is killed mid-DAG (a stage crashes after its predecessor completed),
+then :meth:`Session.resume` rebuilds from the journal and finishes the
+DAG.  The floor: completed stages are NOT re-executed (per-stage run
+counters prove it) and the final results are complete.
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+
+from repro.core import (ComputeUnitDescription, FailureInjector,
+                        PilotDescription, PilotManager, ResourceManager)
+from repro.core.session import Session, hpc_stage
+
+
+# ------------------------------------------------------------------ churn
+def churn_trial(*, n_tasks: int, task_s: float, n_slots: int,
+                chip_rate: float, kill_pilot_at: Optional[float],
+                seed: int, timeout: float = 120.0) -> Dict:
+    """One churn measurement: `n_tasks` 1-chip CUs round-robined onto
+    two pilots while the injector runs.  Returns goodput + MTTR."""
+    rm = ResourceManager(devices=jax.devices() * n_slots)
+    pm = PilotManager(rm, heartbeat_timeout_s=0.3, suspect_grace_s=0.3)
+    half = n_slots // 2
+    a = pm.submit(PilotDescription(n_chips=half, name="a"))
+    b = pm.submit(PilotDescription(n_chips=half, name="b"))
+    cp = pm.control_plane
+    inj = None
+    try:
+        cp.start(interval_s=0.05)
+
+        def work(dt=task_s, mesh=None):
+            time.sleep(dt)
+            return "ok"
+
+        t0 = time.monotonic()
+        cus = [(a if i % 2 == 0 else b).submit(ComputeUnitDescription(
+            fn=work, n_chips=1, tag="churn", max_retries=3))
+            for i in range(n_tasks)]
+        trace = ([(kill_pilot_at, "pilot", "b")]
+                 if kill_pilot_at is not None else None)
+        if chip_rate > 0 or trace:
+            inj = FailureInjector([a, b], seed=seed, chip_rate=chip_rate,
+                                  trace=trace, min_pilots_alive=1)
+            inj.start(tick_s=0.02)
+
+        lost, done = 0, 0
+        for cu in cus:
+            try:
+                if cu.follow(timeout=timeout) == "ok":
+                    done += 1
+                else:                       # pragma: no cover - smoke floor
+                    lost += 1
+            except (RuntimeError, TimeoutError):
+                lost += 1
+        makespan = time.monotonic() - t0
+        if inj is not None:
+            inj.stop()
+        cp.stop()
+        mttr = inj.mttr_samples(cp) if inj is not None else []
+        kills = inj.counts() if inj is not None else {}
+        return {
+            "n_tasks": n_tasks, "completed": done, "lost": lost,
+            "makespan_s": makespan,
+            "goodput_tasks_per_s": done / max(makespan, 1e-9),
+            "kills": kills, "n_kills": sum(kills.values()),
+            "failures_detected": len(cp.failures),
+            "requeued_cus": sum(f.requeued_cus for f in cp.failures),
+            "mttr_s": (float(np.mean(mttr)) if mttr else None),
+            "mttr_samples": len(mttr),
+            "injector_errors": len(inj.errors) if inj is not None else 0,
+        }
+    finally:
+        if inj is not None:
+            inj.stop()
+        pm.shutdown()
+
+
+# ----------------------------------------------------------------- resume
+def resume_trial(*, n_stages: int, stage_s: float, n_slots: int,
+                 timeout: float = 120.0) -> Dict:
+    """Kill a session mid-DAG, resume from its checkpoint, finish.
+    Returns the re-run count of completed stages (floor: 0)."""
+    ckdir = tempfile.mkdtemp(prefix="bench_chaos_ck_")
+    runs = {f"s{i}": 0 for i in range(n_stages)}
+    crash = {"armed": True}
+    crash_at = n_stages // 2
+
+    def make(i):
+        name = f"s{i}"
+
+        def fn(mesh=None, **kw):
+            if i == crash_at and crash["armed"]:
+                crash["armed"] = False
+                raise RuntimeError("injected mid-DAG crash")
+            runs[name] += 1
+            time.sleep(stage_s)
+            return {name.upper(): np.full((4,), float(i), np.float32)}
+        return fn
+
+    def stages():
+        out = [hpc_stage("s0", make(0), outputs=("S0",), n_chips=1)]
+        for i in range(1, n_stages):
+            out.append(hpc_stage(f"s{i}", make(i),
+                                 inputs=(f"S{i - 1}",),
+                                 outputs=(f"S{i}",), n_chips=1))
+        return out
+
+    try:
+        s1 = Session(ResourceManager(devices=jax.devices() * n_slots),
+                     checkpoint_dir=ckdir, checkpoint_interval_s=1e-9)
+        s1.add_pilot(PilotDescription(n_chips=n_slots, name="p"))
+        t0 = time.monotonic()
+        futs = s1.submit_dag(stages(), timeout=timeout)
+        crashed = False
+        for name, f in futs.items():
+            try:
+                f.result(timeout)
+            except Exception:
+                crashed = True
+        first_leg = time.monotonic() - t0
+        completed_before = int(sum(1 for v in runs.values() if v))
+        s1.shutdown()
+        assert crashed, "the injected mid-DAG crash did not fire"
+
+        t1 = time.monotonic()
+        s2 = Session.resume(ckdir,
+                            ResourceManager(devices=jax.devices() * n_slots))
+        s2.add_pilot(PilotDescription(n_chips=n_slots, name="p"))
+        res = s2.run(stages(), timeout=timeout)
+        resume_leg = time.monotonic() - t1
+        s2.shutdown()
+
+        rerun = sum(1 for name, n in runs.items() if n > 1)
+        return {
+            "n_stages": n_stages,
+            "completed_before_crash": completed_before,
+            "restored_stages": len(s2._restored_stages),
+            "rerun_completed_stages": rerun,
+            "final_results": len(res),
+            "all_present": len(res) == n_stages
+            and all(res[f"s{i}"] is not None for i in range(n_stages)),
+            "first_leg_s": first_leg, "resume_leg_s": resume_leg,
+        }
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+# ------------------------------------------------------------------ sweep
+def sweep(*, n_tasks=40, task_s=0.1, n_slots=8, rates=(0.0, 0.5),
+          kill_pilot_at=0.25, n_stages=6, stage_s=0.05,
+          seed=1234) -> List[Dict]:
+    rows = []
+    for rate in rates:
+        r = churn_trial(n_tasks=n_tasks, task_s=task_s, n_slots=n_slots,
+                        chip_rate=rate,
+                        kill_pilot_at=(kill_pilot_at if rate > 0 else None),
+                        seed=seed)
+        rows.append({"arm": "churn", "chip_rate": rate, **r})
+    rows.append({"arm": "resume",
+                 **resume_trial(n_stages=n_stages, stage_s=stage_s,
+                                n_slots=n_slots)})
+    return rows
+
+
+def check_floors(rows: List[Dict]) -> None:
+    """The smoke gates: zero lost stages, recovery completes, MTTR
+    reported, resume re-runs nothing already completed."""
+    for r in rows:
+        if r["arm"] == "churn":
+            assert r["lost"] == 0, f"lost stages under churn: {r}"
+            assert r["completed"] == r["n_tasks"], r
+            assert r["injector_errors"] == 0, r
+            if r["chip_rate"] > 0:
+                # the trace-driven pilot kill must actually land while
+                # work is still in flight, be detected, and yield MTTR
+                assert r["n_kills"] >= 1, f"injector never fired: {r}"
+                assert r["failures_detected"] >= 1, \
+                    f"whole-pilot kill never detected: {r}"
+                assert r["mttr_samples"] >= 1 and r["mttr_s"] is not None, \
+                    f"no MTTR sample: {r}"
+        else:
+            assert r["rerun_completed_stages"] == 0, \
+                f"resume re-ran completed stages: {r}"
+            assert r["all_present"], f"resume lost results: {r}"
+            assert r["restored_stages"] >= 1, r
+    print("smoke floors OK: zero lost stages, recovery + MTTR observed, "
+          "resume re-ran nothing")
+
+
+def run(smoke: bool = True) -> List[Dict]:
+    """Driver-format rows (benchmarks/run.py section 'chaos')."""
+    kw = dict(n_tasks=40, task_s=0.1, n_slots=8, rates=(0.0, 2.0),
+              kill_pilot_at=0.15, n_stages=4, stage_s=0.03) if smoke else {}
+    out = []
+    for r in sweep(**kw):
+        if r["arm"] == "churn":
+            mttr = f"{r['mttr_s']:.3f}" if r["mttr_s"] is not None else "-"
+            out.append({
+                "name": f"chaos/churn_rate{r['chip_rate']}",
+                "us_per_call": r["makespan_s"] * 1e6,
+                "derived": (f"goodput={r['goodput_tasks_per_s']:.1f}/s "
+                            f"kills={r['n_kills']} lost={r['lost']} "
+                            f"mttr_s={mttr}")})
+        else:
+            out.append({
+                "name": "chaos/resume",
+                "us_per_call": r["resume_leg_s"] * 1e6,
+                "derived": (f"restored={r['restored_stages']} "
+                            f"rerun={r['rerun_completed_stages']} "
+                            f"complete={r['all_present']}")})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny deterministic run for CI (fixed seed, "
+                         "asserts the zero-lost/recovery floors); also "
+                         "writes --json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default BENCH_chaos.json "
+                         "with --smoke)")
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--task-s", type=float, default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=1234,
+                    help="injector RNG seed (kill schedule replays)")
+    args = ap.parse_args()
+
+    kw: Dict = {"seed": args.seed}
+    if args.smoke:
+        kw.update(n_tasks=40, task_s=0.1, n_slots=8, rates=(0.0, 2.0),
+                  kill_pilot_at=0.15, n_stages=4, stage_s=0.03)
+    if args.tasks is not None:
+        kw["n_tasks"] = args.tasks
+    if args.task_s is not None:
+        kw["task_s"] = args.task_s
+    if args.slots is not None:
+        kw["n_slots"] = args.slots
+
+    rows = sweep(**kw)
+    if args.smoke:
+        check_floors(rows)
+    json_path = args.json or ("BENCH_chaos.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": rows}, f, indent=2, default=str)
+        print(f"wrote {json_path}")
+
+    churn = [r for r in rows if r["arm"] == "churn"]
+    hdr = (f"{'chip_rate':>9} {'makespan_s':>11} {'goodput/s':>10} "
+           f"{'kills':>6} {'detected':>9} {'requeued':>9} {'lost':>5} "
+           f"{'MTTR_s':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in churn:
+        mttr = f"{r['mttr_s']:.3f}" if r["mttr_s"] is not None else "-"
+        print(f"{r['chip_rate']:>9} {r['makespan_s']:>11.3f} "
+              f"{r['goodput_tasks_per_s']:>10.1f} {r['n_kills']:>6d} "
+              f"{r['failures_detected']:>9d} {r['requeued_cus']:>9d} "
+              f"{r['lost']:>5d} {mttr:>7}")
+    res = next(r for r in rows if r["arm"] == "resume")
+    print(f"\nresume: {res['completed_before_crash']} stage(s) done before "
+          f"the crash, {res['restored_stages']} restored from the journal, "
+          f"{res['rerun_completed_stages']} re-run "
+          f"(resume leg {res['resume_leg_s']:.2f}s, complete="
+          f"{res['all_present']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ queue wait (submit -> first bind) is the starvation measure.
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
 from typing import Dict, List
@@ -131,7 +132,10 @@ def run(smoke: bool = True) -> List[Dict]:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep for CI (seconds)")
+                    help="tiny sweep for CI (seconds); also writes --json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default "
+                         "BENCH_fairshare.json with --smoke)")
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--tasks", type=int, default=None,
                     help="small-tenant task count (a gets 6x)")
@@ -147,6 +151,11 @@ def main() -> None:
         kw["task_s"] = args.task_s
 
     rows = sweep(**kw)
+    json_path = args.json or ("BENCH_fairshare.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": rows}, f, indent=2, default=str)
+        print(f"wrote {json_path}")
     hdr = (f"{'policy':>9} {'makespan_s':>11} "
            f"{'share a/b/c (contended)':>24} "
            f"{'p99 wait a/b/c (s)':>21} {'reclaims':>8}")

@@ -25,11 +25,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "fig5", "fig6", "fig8", "elastic",
                              "fairshare", "dispatch", "staging", "serve", "kernels",
-                             "autotune", "roofline"])
+                             "autotune", "roofline", "chaos"])
     args = ap.parse_args()
 
-    from benchmarks import (bench_autotune, bench_dispatch, bench_elastic,
-                            bench_fairshare, bench_kernels,
+    from benchmarks import (bench_autotune, bench_chaos, bench_dispatch,
+                            bench_elastic, bench_fairshare, bench_kernels,
                             bench_session_placement,
                             bench_serve_scale, bench_staging,
                             fig5_overheads, fig6_kmeans,
@@ -46,6 +46,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "autotune": bench_autotune.run,
         "roofline": roofline_table.run,
+        "chaos": bench_chaos.run,
     }
     print("name,us_per_call,derived")
     for name, fn in sections.items():

@@ -9,8 +9,10 @@ YARN-style slot scheduler — with data locality, gang scheduling,
 two-phase admission with AppMaster reuse, straggler speculation and
 elastic resize.  See DESIGN.md for the full architecture map.
 """
+from .chaos import FailureInjector, KillEvent  # noqa: F401
 from .compute_unit import ComputeUnit, ComputeUnitDescription, CUState  # noqa: F401
-from .control_plane import ControlPlane, RebalanceEvent  # noqa: F401
+from .control_plane import (ControlPlane, FailureEvent,  # noqa: F401
+                            RebalanceEvent)
 from .dataplane import (DataPlane, GFS_ARCHIVE, Lineage, Link,  # noqa: F401
                         PilotData, PilotDataRegistry, TransferCostModel)
 from .pilot import Pilot, PilotDescription, PilotManager, PilotState  # noqa: F401

@@ -68,6 +68,12 @@ class Agent:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # passive liveness: stamped ONLY by the agent's own loop, never
+        # by a forced heartbeat() — so a ControlPlane poll cannot make a
+        # wedged/killed agent look alive (the detection substrate of
+        # check_failures' heartbeat deadline)
+        self.last_alive = time.monotonic()
+        self._killed = False               # chaos: agent process crashed
         self._cus: Dict[str, ComputeUnit] = {}
         self._ema: Dict[str, float] = {}         # tag -> runtime EMA
         # roofline estimate-vs-actual cross-check: the Session reports
@@ -104,6 +110,19 @@ class Agent:
         self._wake.set()
         if self._thread is not None:
             self._thread.join(timeout=5)
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+    def kill(self) -> None:
+        """Chaos: the agent process crashes.  Unlike :meth:`stop` there
+        is no drain and no goodbye — the scheduling loop and heartbeats
+        stop abruptly, queued spawns are dropped, and results of CUs
+        still executing are never published (:meth:`_spawn` suppresses
+        publication for a killed agent).  Detection is the
+        ControlPlane's job: ``last_alive`` freezes at the crash and the
+        heartbeat deadline eventually declares the pilot DEAD."""
+        self._killed = True
+        self._stop.set()
+        self._wake.set()
         self._pool.shutdown(wait=False, cancel_futures=True)
 
     # -------------------------------------------------------------- submit
@@ -219,6 +238,7 @@ class Agent:
     # ---------------------------------------------------------------- loop
     def _loop(self) -> None:
         while not self._stop.is_set():
+            self.last_alive = time.monotonic()
             self._check_preemption()
             # schedule_round binds and reads the binding generation in
             # ONE lock acquisition (try_schedule + per-CU binding_gen
@@ -242,6 +262,8 @@ class Agent:
         """Paper Fig 3: the agent's Heartbeat Monitor — a periodically
         refreshed liveness/status snapshot the Pilot-Manager's
         ControlPlane polls for backlog pressure."""
+        if self._killed:
+            return          # a crashed agent beats no more, even forced
         now = time.monotonic()
         if not force and now - getattr(self, "_last_beat", 0.0) < 0.25:
             return
@@ -386,6 +408,8 @@ class Agent:
 
     # --------------------------------------------------------- TaskSpawner
     def _spawn(self, cu: ComputeUnit, gen: Optional[int] = None) -> None:
+        if self._killed:                 # crashed agent: spawn nothing
+            return
         if cu.done:                      # canceled while queued in the pool
             self.scheduler.release(cu, gen=gen)
             self._wake.set()
@@ -406,8 +430,11 @@ class Agent:
             fn = self._launch_method(cu)
             result = fn(*cu.desc.args, **kwargs)
             # a speculation winner or a preemption may have resolved this
-            # CU while fn ran — never clobber the published result
-            if cu.done or cu.state is CUState.CANCELED:
+            # CU while fn ran — never clobber the published result; a
+            # killed agent publishes nothing (its CUs were re-queued on
+            # survivors by the recovery — a late local completion must
+            # not race the clone that replaced it)
+            if self._killed or cu.done or cu.state is CUState.CANCELED:
                 return
             cu.result = result
             cu._set_state(CUState.DONE)
@@ -421,7 +448,7 @@ class Agent:
                     priority=cu.desc.priority,
                     reason=f"stage-out:{cu.uid}")
         except BaseException as e:  # noqa: BLE001 — agent must survive any CU
-            if cu.done or cu.state is CUState.CANCELED:
+            if self._killed or cu.done or cu.state is CUState.CANCELED:
                 return
             cu.error = e
             if cu.retries < cu.desc.max_retries:
@@ -457,6 +484,23 @@ class Agent:
         ema = self._ema.get(cu.desc.tag)
         self._ema[cu.desc.tag] = rt if ema is None else 0.7 * ema + 0.3 * rt
 
+    def _expected_runtime(self, cu: ComputeUnit) -> Optional[float]:
+        """The straggler watchdog's baseline for one CU: the tag's EMA
+        when history exists, else the placer's roofline estimate
+        (``desc.est_runtime_s``) calibrated by this pilot's observed
+        EMA actual/estimate ratio (the PR-7 est-drift sample) — so a
+        first-of-its-tag stage is speculated against the model's
+        prediction instead of never."""
+        ema = self._ema.get(cu.desc.tag)
+        if ema is not None:
+            return ema
+        est = cu.desc.est_runtime_s
+        if est is None:
+            return None
+        with self._lock:
+            ratio = self._est_ema_ratio
+        return est * ratio if ratio else est
+
     def _check_stragglers(self) -> None:
         if not self.enable_speculation:
             return
@@ -465,15 +509,15 @@ class Agent:
             running = [c for c in self._cus.values()
                        if c.state is CUState.RUNNING and c.speculative_of is None]
         for cu in running:
-            ema = self._ema.get(cu.desc.tag)
-            if ema is None:
+            expected = self._expected_runtime(cu)
+            if expected is None:
                 continue
             started = cu.timings.get("t_running")
             if started is None:
                 continue
             elapsed = now - started
             already = any(c.speculative_of == cu.uid for c in self._cus.values())
-            if (elapsed > max(SPECULATION_FACTOR * ema, SPECULATION_MIN_S)
+            if (elapsed > max(SPECULATION_FACTOR * expected, SPECULATION_MIN_S)
                     and not already and self.scheduler.n_free >= cu.desc.n_chips):
                 dup = ComputeUnit(cu.desc)
                 dup.speculative_of = cu.uid
@@ -482,7 +526,11 @@ class Agent:
                 self.scheduler.submit(dup)
 
     def _resolve_speculation(self, done_cu: ComputeUnit) -> None:
-        """First finisher wins: mirror result into the counterpart."""
+        """First finisher wins: the winner's result is mirrored into the
+        still-running counterpart, which is CANCELED — it did not
+        produce the value, and its late return must neither clobber the
+        published result (the ``cu.done`` guard in ``_spawn``) nor leak
+        its queue charge (the executor's finally-release uncharges)."""
         with self._lock:
             pairs = [c for c in self._cus.values()
                      if c.uid != done_cu.uid and (
@@ -491,14 +539,19 @@ class Agent:
         for other in pairs:
             if not other.done:
                 other.result = done_cu.result
-                other._set_state(CUState.DONE if done_cu.state is CUState.DONE
-                                 else CUState.CANCELED)
+                other._set_state(CUState.CANCELED)
 
     # ------------------------------------------------------------- failure
     def handle_device_loss(self, devices: Sequence) -> List[str]:
-        dev_ids = {id(d) for d in devices}
-        idxs = [i for i, d in enumerate(self.scheduler._devices)
-                if id(d) in dev_ids]
+        # count-aware slot matching: dry-run slices alias one physical
+        # device across many slots, so each lost device claims exactly
+        # ONE matching slot (losing a chip must not wipe the pilot)
+        idxs: List[int] = []
+        for d in devices:
+            i = next((i for i, dev in enumerate(self.scheduler._devices)
+                      if id(dev) == id(d) and i not in idxs), None)
+            if i is not None:
+                idxs.append(i)
         impacted = self.scheduler.remove_devices(idxs)
         for uid in impacted:
             cu = self._cus.get(uid)
@@ -507,6 +560,13 @@ class Agent:
             if cu.retries < max(cu.desc.max_retries, 1):
                 self._requeue_clone(cu, retries=cu.retries + 1)
             else:
-                cu._set_state(CUState.CANCELED)
+                # terminal: retry budget exhausted — FAILED with a
+                # diagnostic, never a silent CANCELED (waiters must see
+                # the failure, not a None result)
+                cu.error = RuntimeError(
+                    f"{cu.uid} (tag {cu.desc.tag!r}) lost its devices on "
+                    f"{self.pilot.uid} and exhausted its retry budget "
+                    f"({cu.retries}/{max(cu.desc.max_retries, 1)} retries)")
+                cu._set_state(CUState.FAILED)
         self._wake.set()
         return impacted

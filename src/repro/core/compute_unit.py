@@ -51,6 +51,10 @@ class ComputeUnitDescription:
     # The scheduler delay-schedules a CU whose stage_in is in flight.
     stage_in: Sequence[Any] = ()
     stage_out: Sequence[Any] = ()
+    # placer's roofline runtime estimate (seconds) for this CU on the
+    # pilot it was submitted to — the straggler watchdog's baseline
+    # when the tag has no EMA history yet (speculate on actual > k×est)
+    est_runtime_s: Optional[float] = None
 
 
 class ComputeUnit:
@@ -122,5 +126,6 @@ class ComputeUnit:
 
     def runtime_s(self) -> Optional[float]:
         t0 = self.timings.get("t_running")
-        t1 = self.timings.get("t_done") or self.timings.get("t_failed")
+        t1 = (self.timings.get("t_done") or self.timings.get("t_failed")
+              or self.timings.get("t_canceled"))
         return None if t0 is None or t1 is None else t1 - t0

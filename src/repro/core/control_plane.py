@@ -37,9 +37,40 @@ import dataclasses
 import math
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
+from .compute_unit import ComputeUnit, CUState
 from .dataplane import Link, replicated_sharding
+
+# pilot liveness states (Hadoop analogue: the RM's NM liveliness
+# monitor).  ALIVE pilots heartbeat within the deadline; a SUSPECT
+# pilot missed one deadline (maybe a GC pause — give it grace); a DEAD
+# pilot missed deadline + grace and is recovered, never resurrected.
+ALIVE = "alive"
+SUSPECT = "suspect"
+DEAD = "dead"
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    """One detected pilot death and everything its recovery did."""
+    t_detected: float
+    t_recovered: float
+    pilot: str                     # pilot uid declared DEAD
+    reason: str
+    requeued_cus: int              # in-flight CUs cloned onto survivors
+    failed_cus: int                # CUs with nowhere left to go
+    lost_datasets: List[str]       # names whose LAST replica died
+    rematerialized: int            # of those, recovered via lineage
+    orphan_micro_tasks: int        # Raptor tasks handed to survivors
+    reclaimed_chips: int
+    regranted: Dict[str, int]      # survivor uid -> chips absorbed
+    serve_requests_recovered: int
+
+    @property
+    def recovery_s(self) -> float:
+        """MTTR sample: detection -> recovery-complete."""
+        return self.t_recovered - self.t_detected
 
 
 @dataclasses.dataclass
@@ -71,7 +102,10 @@ class ControlPlane:
                  min_chips: int = 1, max_move_fraction: float = 0.5,
                  min_keep: int = 1,
                  drain_preempt_after_s: float = 0.5,
-                 drain_timeout_s: float = 30.0):
+                 drain_timeout_s: float = 30.0,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 suspect_grace_s: Optional[float] = None,
+                 redistribute_on_death: bool = True):
         self.pm = pm
         self.hysteresis = hysteresis
         self.min_chips = min_chips                  # never move fewer
@@ -79,6 +113,25 @@ class ControlPlane:
         self.min_keep = min_keep                    # chips a pilot keeps
         self.drain_preempt_after_s = drain_preempt_after_s
         self.drain_timeout_s = drain_timeout_s
+        # failure detection: a pilot whose agent loop has not stamped
+        # ``last_alive`` for heartbeat_timeout_s turns SUSPECT; after a
+        # further suspect_grace_s (default: another timeout) it is DEAD
+        # and recovered.  None disables detection (the default — pure
+        # rebalancing deployments pay nothing for it).
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.suspect_grace_s = suspect_grace_s
+        self.redistribute_on_death = redistribute_on_death
+        self.liveness: Dict[str, str] = {}    # pilot uid -> ALIVE/SUSPECT/DEAD
+        self._suspect_since: Dict[str, float] = {}
+        self.failures: List[FailureEvent] = []
+        # recovery hooks the Session wires up (kept as callables so the
+        # core stays import-clean of the session/serve layers):
+        #   on_data_loss(lost_names) -> rematerialized count
+        #   on_orphan_tasks(tasks, survivors) -> resubmitted count
+        #   on_pilot_dead: callables (pilot, survivors) -> recovered count
+        self.on_data_loss: Optional[Callable[[List[str]], int]] = None
+        self.on_orphan_tasks: Optional[Callable[[List, List], int]] = None
+        self.on_pilot_dead: List[Callable[[Any, List], int]] = []
         self.in_flight: Dict[str, int] = {}   # pilot uid -> pending chip Δ
         self.events: List[RebalanceEvent] = []
         self.errors: List[BaseException] = []
@@ -90,6 +143,13 @@ class ControlPlane:
     def _active_pilots(self) -> List:
         return [p for p in self.pm.pilots
                 if p.agent is not None and p.state.value == "active"]
+
+    def _live_pilots(self) -> List:
+        """Active pilots not under liveness suspicion — the only ones a
+        rebalance may drain (draining a dead agent would hang until
+        drain_timeout_s) or grant chips to."""
+        return [p for p in self._active_pilots()
+                if self.liveness.get(p.uid, ALIVE) == ALIVE]
 
     @classmethod
     def pressure_of(cls, hb: Dict[str, Any]) -> float:
@@ -146,13 +206,191 @@ class ControlPlane:
         with self._lock:
             return self.in_flight.get(pilot_uid, 0)
 
+    # ----------------------------------------------------- failure handling
+    def liveness_of(self, pilot_uid: str) -> str:
+        return self.liveness.get(pilot_uid, ALIVE)
+
+    def check_failures(self, now: Optional[float] = None
+                       ) -> List[FailureEvent]:
+        """One liveness sweep (Hadoop analogue: the RM expiring an NM
+        that missed its liveness interval).  A pilot whose agent loop
+        has not stamped ``last_alive`` within ``heartbeat_timeout_s``
+        turns SUSPECT; if a fresh beat lands during the grace window it
+        is reprieved back to ALIVE, otherwise it is declared DEAD and
+        :meth:`recover_pilot` runs.  Returns the FailureEvents produced
+        this sweep."""
+        if self.heartbeat_timeout_s is None:
+            return []
+        now = time.monotonic() if now is None else now
+        grace = (self.suspect_grace_s if self.suspect_grace_s is not None
+                 else self.heartbeat_timeout_s)
+        recovered: List[FailureEvent] = []
+        for p in self._active_pilots():
+            age = now - p.agent.last_alive
+            state = self.liveness.get(p.uid, ALIVE)
+            if age <= self.heartbeat_timeout_s:
+                if state == SUSPECT:          # reprieve: beat came back
+                    self.liveness[p.uid] = ALIVE
+                    self._suspect_since.pop(p.uid, None)
+                continue
+            if state == ALIVE:
+                self.liveness[p.uid] = SUSPECT
+                self._suspect_since[p.uid] = now
+            elif state == SUSPECT and age > self.heartbeat_timeout_s + grace:
+                recovered.append(self.recover_pilot(
+                    p, reason=f"heartbeat missing {age:.2f}s"))
+        return recovered
+
+    def recover_pilot(self, pilot, *, reason: str = "failed"
+                      ) -> FailureEvent:
+        """Declare ``pilot`` DEAD and run the full recovery pipeline:
+
+          1. serve/session hooks first (they need the replica map as the
+             dead pilot left it, e.g. to spot spooled KV pages);
+          2. Raptor overlay orphans handed to the on_orphan_tasks hook
+             (or failed when nobody claims them);
+          3. the DataPlane drops the pilot's replicas; names whose LAST
+             replica died go to the on_data_loss hook (lineage remat);
+          4. the device lease is reclaimed and — redistribute_on_death —
+             regranted to the hottest survivor;
+          5. every in-flight/queued CU is cloned onto a survivor
+             (``CU.follow`` chases the chain) or FAILED with a
+             diagnostic when no survivor can hold it.
+        """
+        t_detected = time.monotonic()
+        self.liveness[pilot.uid] = DEAD
+        self._suspect_since.pop(pilot.uid, None)
+        agent = pilot.agent
+        # make the crash total before recovering: a half-dead agent must
+        # not publish results or beat while we requeue its work
+        pilot.kill()
+        pilot.mark_failed()
+        survivors = self._live_pilots()
+
+        # 1. serve/session recovery hooks (before the replica map mutates)
+        serve_recovered = 0
+        for hook in list(self.on_pilot_dead):
+            try:
+                serve_recovered += int(hook(pilot, survivors) or 0)
+            except BaseException as e:  # noqa: BLE001 — recovery continues
+                self.errors.append(e)
+
+        # 2. orphaned Raptor micro-tasks
+        orphans: List = []
+        for master in agent.overlays():
+            try:
+                orphans.extend(master.orphans())
+            except BaseException as e:  # noqa: BLE001
+                self.errors.append(e)
+        n_orphans = 0
+        if orphans and self.on_orphan_tasks is not None:
+            try:
+                n_orphans = int(self.on_orphan_tasks(orphans, survivors) or 0)
+            except BaseException as e:  # noqa: BLE001
+                self.errors.append(e)
+        else:
+            for t in orphans:
+                if not t.done:
+                    t.error = RuntimeError(
+                        f"overlay pilot {pilot.uid} died: {reason}")
+                    t._finish()
+
+        # 3. replica loss + lineage rematerialization
+        lost = pilot.data.drop_pilot_replicas(pilot.uid)
+        remat = 0
+        if lost and self.on_data_loss is not None:
+            try:
+                remat = int(self.on_data_loss(lost) or 0)
+            except BaseException as e:  # noqa: BLE001
+                self.errors.append(e)
+
+        # 4. lease reclaim + redistribution onto the hottest survivor
+        n_chips = len(pilot.devices)
+        self.pm.rm.release(pilot.uid)
+        regranted: Dict[str, int] = {}
+        if self.redistribute_on_death and survivors and n_chips:
+            free = len(self.pm.rm.free_indices())
+            n = min(n_chips, free)
+            if n:
+                target = max(
+                    survivors,
+                    key=lambda p: self.pressure_of(p.agent.heartbeat()))
+                try:
+                    granted = self.pm.rm.grant(n, target.uid)
+                    target.absorb_devices(granted)
+                    regranted[target.uid] = len(granted)
+                except BaseException as e:  # noqa: BLE001
+                    self.errors.append(e)
+
+        # 5. requeue the dead pilot's CUs onto survivors (clone chains)
+        requeued, failed = self._requeue_cus(pilot, survivors, reason)
+
+        ev = FailureEvent(
+            t_detected=t_detected, t_recovered=time.monotonic(),
+            pilot=pilot.uid, reason=reason,
+            requeued_cus=requeued, failed_cus=failed,
+            lost_datasets=lost, rematerialized=remat,
+            orphan_micro_tasks=n_orphans, reclaimed_chips=n_chips,
+            regranted=regranted, serve_requests_recovered=serve_recovered)
+        with self._lock:
+            self.failures.append(ev)
+        return ev
+
+    def _requeue_cus(self, pilot, survivors: List, reason: str
+                     ) -> "tuple[int, int]":
+        """Clone every not-done CU of a dead pilot onto a survivor.
+        Raptor master/extension CUs are canceled outright (the overlay's
+        tasks were already recovered in step 2); speculative duplicates
+        die with their pilot (the original still runs elsewhere)."""
+        agent = pilot.agent
+        with agent._lock:
+            victims = [c for c in agent._cus.values() if not c.done]
+        for cu in agent.scheduler.evacuate():
+            if all(cu.uid != v.uid for v in victims):
+                victims.append(cu)
+        requeued = failed = 0
+        for victim in victims:
+            if victim.done:
+                continue
+            if (victim.desc.tag.startswith("raptor:")
+                    or victim.speculative_of is not None):
+                victim._set_state(CUState.CANCELED)
+                continue
+            placed: Optional[ComputeUnit] = None
+            for target in sorted(survivors,
+                                 key=lambda p: p.agent.scheduler.n_free,
+                                 reverse=True):
+                if target.agent.scheduler.n_slots < victim.desc.n_chips:
+                    continue
+                try:
+                    placed = target.agent.submit(victim.desc)
+                    break
+                except (PermissionError, ValueError, KeyError) as e:
+                    self.errors.append(e)
+            if placed is not None:
+                # publish the clone BEFORE canceling so follow() chases
+                victim.result = placed
+                victim._set_state(CUState.CANCELED)
+                requeued += 1
+            else:
+                victim.error = RuntimeError(
+                    f"{victim.uid} was in flight on {pilot.uid} when it "
+                    f"died ({reason}) and no surviving pilot can hold "
+                    f"{victim.desc.n_chips} chip(s)")
+                victim._set_state(CUState.FAILED)
+                failed += 1
+        return requeued, failed
+
     # ------------------------------------------------------------ deciding
     def rebalance(self, max_chips: Optional[int] = None
                   ) -> Optional[RebalanceEvent]:
         """One control step: move idle chips from the coldest pilot to
         the hottest if the pressure gap clears the hysteresis band.
         Returns the event, or None when balanced (or nothing to move)."""
-        snap = self.poll()
+        # only ALIVE pilots participate: draining a SUSPECT/DEAD pilot
+        # would block on an agent that will never answer
+        snap = {uid: m for uid, m in self.poll().items()
+                if self.liveness.get(uid, ALIVE) == ALIVE}
         if len(snap) < 2:
             return None
         hot = max(snap.values(), key=lambda m: m["pressure"])
@@ -176,8 +414,9 @@ class ControlPlane:
         `pilot` (the Session's unplaceable-stage path). Busy chips may be
         preempted by the drain. Returns chips actually granted."""
         granted = 0
-        others = sorted((m for m in self.poll().values()
-                         if m["pilot"].uid != pilot.uid),
+        others = sorted((m for uid, m in self.poll().items()
+                         if m["pilot"].uid != pilot.uid
+                         and self.liveness.get(uid, ALIVE) == ALIVE),
                         key=lambda m: m["pressure"])
         for m in others:
             if granted >= n:
@@ -257,7 +496,9 @@ class ControlPlane:
         delta applied."""
         snap = snap if snap is not None else self.poll()
         deltas: Dict[str, int] = {}
-        for m in snap.values():
+        for uid, m in snap.items():
+            if self.liveness.get(uid, ALIVE) != ALIVE:
+                continue
             pilot = m["pilot"]
             for master in pilot.agent.overlays():
                 ov = m.get("overlays", {}).get(master.uid)
@@ -287,6 +528,7 @@ class ControlPlane:
     def _loop(self, interval_s: float) -> None:
         while not self._stop.wait(interval_s):
             try:
+                self.check_failures()
                 self.rebalance()
                 self.scale_overlays()
             except BaseException as e:  # noqa: BLE001 — keep the loop alive

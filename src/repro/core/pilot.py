@@ -219,6 +219,27 @@ class Pilot:
             if drop:
                 self.rm.reclaim(self.uid, drop)
 
+    def kill(self) -> None:
+        """Chaos: the whole pilot vanishes (node failure / walltime
+        expiry).  Unlike :meth:`shutdown` nothing drains and nothing is
+        released — the agent just crashes and the staging pipeline
+        stops.  The state deliberately stays ACTIVE: the cluster only
+        learns of the death when the ControlPlane's heartbeat deadline
+        expires (``check_failures`` → ``recover_pilot``), which then
+        marks the pilot FAILED and reclaims the lease."""
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
+        if self.agent is not None:
+            self.agent.kill()
+        self.timings["t_killed"] = time.monotonic()
+
+    def mark_failed(self) -> None:
+        """Recovery epitaph: the ControlPlane declared this pilot DEAD.
+        From here on the pilot is out of every candidate set (placer,
+        rebalancer, injector)."""
+        self.state = PilotState.FAILED
+        self.timings["t_failed"] = time.monotonic()
+
     def shutdown(self) -> None:
         if self.prefetcher is not None:
             self.prefetcher.stop()

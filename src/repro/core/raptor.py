@@ -539,6 +539,31 @@ class RaptorMaster:
             self.stats["shrunk"] += len(victims)
         return len(victims)
 
+    def orphans(self) -> List[MicroTask]:
+        """Failure recovery: the overlay's pilot is dead.  Halt the
+        master (idempotent) and hand back every micro-task that never
+        published — pending plus in-flight — so the ControlPlane can
+        resubmit them on a surviving overlay.  Pending tasks were never
+        charged and the dead scheduler's in-flight charges die with it,
+        so no uncharge happens here.  A worker thread that outlives the
+        crash may still publish its task-in-hand locally (a partitioned
+        worker finishing its last task); ``MicroTask._finish`` fires
+        callbacks exactly once, so the resubmitted duplicate's mirror
+        is then a benign no-op — at-least-once execution, exactly-once
+        result publication."""
+        out: List[MicroTask] = []
+        with self._cv:
+            self._closed = True
+            self._halt = True
+            for dq in self._pending.values():
+                out.extend(t for t in dq if not t.done)
+                dq.clear()
+            self._npending = 0
+            out.extend(t for t in self._inflight.values() if not t.done)
+            self._inflight.clear()
+            self._cv.notify_all()
+        return out
+
     # ------------------------------------------------------- failure inject
     def fail_worker(self, wid: int) -> None:
         """Failure injection (tests/chaos): the worker dies 'holding'

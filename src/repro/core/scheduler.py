@@ -174,6 +174,24 @@ class YarnStyleScheduler:
             return [cu for (_, cu), _q in self.queues.pending_entries()
                     if cu.state in (CUState.PENDING, CUState.RESERVED)]
 
+    def evacuate(self) -> List[ComputeUnit]:
+        """Failure recovery: atomically pull every pending CU off the
+        tenant queues and return the not-yet-done ones.  The pilot is
+        dead — nothing will ever bind here again — so the queues empty
+        wholesale in ONE lock acquisition; CU states are untouched (the
+        ControlPlane replaces each with a clone chain on a survivor).
+        Pending CUs hold no queue charges yet: nothing to uncharge."""
+        with self._lock:
+            out: List[ComputeUnit] = []
+            for entry, q in self.queues.pending_entries():
+                q.remove(entry)
+                cu = entry[1]
+                if not cu.done:
+                    out.append(cu)
+            if out:
+                self._bump()
+        return out
+
     def running_assignments(self) -> Dict[str, List[int]]:
         """Snapshot of uid -> bound device indices, taken under the lock."""
         with self._lock:

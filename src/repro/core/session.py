@@ -38,6 +38,9 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import json
+import os
+import pickle
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -49,9 +52,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .compute_unit import ComputeUnitDescription
-from .dataplane import (DataPlane, Lineage, Link, TransferCostModel,
-                        replicated_sharding)
-from .pilot import Pilot, PilotDescription, PilotManager
+from .dataplane import (DataPlane, GFS_ARCHIVE, Lineage, Link,
+                        TransferCostModel, replicated_sharding)
+from .pilot import Pilot, PilotDescription, PilotManager, PilotState
 from .resource_manager import ResourceManager
 from .staging import DataRef, as_refs
 from repro.roofline.placement import StageCost, est_runtime, estimate_error
@@ -156,7 +159,9 @@ class Session:
                  cost_model: Optional[TransferCostModel] = None,
                  prefetch: bool = False,
                  roofline_placement: bool = True,
-                 calibrate_estimates: bool = False):
+                 calibrate_estimates: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_interval_s: float = 0.0):
         self.cost_model = cost_model or TransferCostModel()
         self.dataplane = DataPlane(cost_model=self.cost_model)
         # prefetch=True routes stage inputs through each pilot's async
@@ -185,6 +190,16 @@ class Session:
         self._pre_staged: Dict[str, Tuple] = {}     # stage -> (pilot, dec, reqs)
         self._lock = threading.Lock()
         self._move_lock = threading.Lock()          # serializes input moves
+        # session checkpoint/resume (Hadoop analogue: RM/AM restart with
+        # work-preserving recovery): a periodic journal of DAG state —
+        # completed stages, placements, DataPlane contents + lineage —
+        # so Session.resume(dir) continues without re-running stages
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_interval_s = checkpoint_interval_s
+        self._last_ckpt = 0.0
+        self._ckpt_lock = threading.Lock()
+        self._restored_stages: set = set()          # completed pre-resume
+        self._restore_manifest: Optional[Tuple[str, Dict[str, Any]]] = None
 
     # ------------------------------------------------------------- tenants
     def tenant(self, name: str, *, queue: Optional[str] = None,
@@ -221,7 +236,11 @@ class Session:
         return pilot
 
     def pilots_by_runtime(self, runtime: str) -> List[Pilot]:
-        return [p for p in self.pilots.values() if p.desc.runtime == runtime]
+        # FAILED pilots (heartbeat death) stay registered — their name
+        # and timings matter for postmortems — but are never candidates
+        return [p for p in self.pilots.values()
+                if p.desc.runtime == runtime
+                and p.state is PilotState.ACTIVE]
 
     def shutdown(self) -> None:
         with self._lock:
@@ -356,10 +375,15 @@ class Session:
     # -------------------------------------------------------------- placer
     def _compatible(self, stage: Stage) -> List[Pilot]:
         if stage.pilot is not None:
-            return [self.pilots[stage.pilot]]
+            pinned = self.pilots[stage.pilot]
+            if pinned.state is PilotState.ACTIVE:
+                return [pinned]
+            # the pinned pilot died: fall through to the normal candidate
+            # set — a rematerialized stage must land on a survivor
         if stage.kind == HPC:
             return self.pilots_by_runtime(HPC)
-        return list(self.pilots.values())   # analytics: native or Mode I
+        return [p for p in self.pilots.values()      # analytics: native
+                if p.state is PilotState.ACTIVE]     # or Mode I
 
     def score(self, stage: Stage, pilot: Pilot) -> Dict[str, float]:
         """The placer objective, reported term by term."""
@@ -479,6 +503,7 @@ class Session:
             if bad:
                 raise ValueError(
                     f"stage {s.name!r} waits on unknown stage(s) {bad}")
+        self._restore_data()       # lazy half of resume (no-op otherwise)
         deps = self._producers(stages)
         ordered = self._topo_order(stages, deps)
         with self._lock:
@@ -490,6 +515,13 @@ class Session:
                                 thread_name_prefix="session-stage")
         futures: Dict[str, Future] = {}
         for s in ordered:
+            if s.name in self._restored_stages:
+                # resumed session: this stage completed before the crash
+                # — hand back its checkpointed result, do not re-run
+                fut: Future = Future()
+                fut.set_result(self.results.get(s.name))
+                futures[s.name] = fut
+                continue
             dep_futs = [futures[d] for d in deps[s.name] if d in futures]
             futures[s.name] = ex.submit(self._run_stage, s, dep_futs, timeout)
         ex.shutdown(wait=False)
@@ -575,12 +607,15 @@ class Session:
             if staging is None:
                 self._ensure_inputs_on(stage, pilot, decision)
             t_run = time.monotonic()
+            # thread the placer's roofline estimate into the CU so the
+            # straggler watchdog has a baseline before any EMA history
+            est = decision.get("chosen", {}).get("est_runtime")
             if stage.kind == HPC:
                 result = self._run_hpc(stage, pilot, timeout,
-                                       staging=staging)
+                                       staging=staging, est_s=est)
             else:
                 result = self._run_analytics(stage, pilot, decision, timeout,
-                                             staging=staging)
+                                             staging=staging, est_s=est)
             self._cross_check_estimate(stage, pilot, decision,
                                        time.monotonic() - t_run)
             if staging is not None:
@@ -602,6 +637,7 @@ class Session:
         with self._lock:
             self.results[stage.name] = result
             self.placements[stage.name] = decision
+        self._maybe_checkpoint()
         return result
 
     def _ensure_inputs_on(self, stage: Stage, pilot: Pilot,
@@ -663,7 +699,8 @@ class Session:
                 + (f":{stage.tenant}" if stage.tenant else ""))
 
     def _run_hpc(self, stage: Stage, pilot: Pilot, timeout: float,
-                 staging: Optional[Sequence] = None) -> Any:
+                 staging: Optional[Sequence] = None,
+                 est_s: Optional[float] = None) -> Any:
         # whole-pilot stages size to the scheduler's LIVE slot count, not
         # len(devices): chips draining away are still in the device list
         # but a gang that counts them would fail fast
@@ -675,14 +712,16 @@ class Session:
         cu = pilot.submit(ComputeUnitDescription(
             fn=job, gang=stage.gang, n_chips=n, tag=f"stage:{stage.name}",
             data=tuple(stage.inputs), app_id=self._app_id(stage),
-            tenant=stage.tenant, queue=stage.queue), staging=staging)
+            tenant=stage.tenant, queue=stage.queue,
+            est_runtime_s=est_s), staging=staging)
         # follow(): a ControlPlane drain may preempt the CU and forward
         # to a re-queued clone — the stage result is the chain's end
         return cu.follow(timeout)
 
     def _run_analytics(self, stage: Stage, pilot: Pilot,
                        decision: Dict[str, Any], timeout: float,
-                       staging: Optional[Sequence] = None) -> Any:
+                       staging: Optional[Sequence] = None,
+                       est_s: Optional[float] = None) -> Any:
         if pilot.desc.runtime == ANALYTICS:
             engine = self._engine_for(pilot)
             decision["mode"] = "native"
@@ -696,7 +735,8 @@ class Session:
                 or max(pilot.agent.scheduler.n_slots, 1),
                 tag=f"stage:{stage.name}", data=tuple(stage.inputs),
                 needs_mesh=False, app_id=self._app_id(stage),
-                tenant=stage.tenant, queue=stage.queue), staging=staging)
+                tenant=stage.tenant, queue=stage.queue,
+                est_runtime_s=est_s), staging=staging)
             return cu.follow(timeout)
         # Mode I: carve an on-demand analytics cluster out of the HPC
         # pilot holding the data (compute goes to the data).  The carve
@@ -762,3 +802,228 @@ class Session:
             raise KeyError(f"no lineage for {name!r}")
         stage = self._stages[lin.stage]
         return self._run_stage(stage, (), timeout)
+
+    # ------------------------------------------------------ fault tolerance
+    def enable_fault_tolerance(self, *, heartbeat_timeout_s: float = 1.0,
+                               suspect_grace_s: Optional[float] = None,
+                               start_interval_s: Optional[float] = None
+                               ) -> None:
+        """Arm heartbeat-deadline failure detection on the ControlPlane
+        and wire its recovery hooks back into this Session: lost
+        datasets rematerialize through lineage, orphaned Raptor
+        micro-tasks resubmit on a surviving overlay, and serve routers
+        move a dead pilot's requests onto surviving engines.  Pass
+        ``start_interval_s`` to also start the autonomous control loop
+        (detection then runs without any explicit ``check_failures``
+        call)."""
+        cp = self.control_plane
+        cp.heartbeat_timeout_s = heartbeat_timeout_s
+        cp.suspect_grace_s = suspect_grace_s
+        cp.on_data_loss = self._recover_lost_data
+        cp.on_orphan_tasks = self._recover_micro_tasks
+        if self._recover_serving not in cp.on_pilot_dead:
+            cp.on_pilot_dead.append(self._recover_serving)
+        if start_interval_s is not None:
+            cp.start(interval_s=start_interval_s)
+
+    def _recover_lost_data(self, names: Sequence[str]) -> int:
+        """ControlPlane hook: a dead pilot held the LAST replica of these
+        datasets.  Re-run each distinct producing stage once (lineage
+        recovery, HDFS-re-replication analogue)."""
+        stages: List[str] = []
+        for name in names:
+            lin = self.dataplane.lineage_of(name)
+            if lin is not None and lin.stage in self._stages \
+                    and lin.stage not in stages:
+                stages.append(lin.stage)
+        recovered = 0
+        for sname in stages:
+            try:
+                self._run_stage(self._stages[sname], (), 600.0)
+                recovered += 1
+            except BaseException as e:  # noqa: BLE001 — count what worked
+                self.control_plane.errors.append(e)
+        return recovered
+
+    def _recover_micro_tasks(self, tasks: Sequence, survivors: List) -> int:
+        """ControlPlane hook: a dead pilot's Raptor overlay orphaned
+        these micro-tasks.  Resubmit each on a surviving overlay and
+        mirror the new task's completion into the old handle (waiters
+        hold the old one)."""
+        try:
+            master = self._overlay_for(None, None)
+        except RuntimeError as e:
+            for t in tasks:
+                if not t.done:
+                    t.error = e
+                    t._finish()
+            return 0
+        resubmitted = 0
+        for t in tasks:
+            if t.done:
+                continue
+            try:
+                fn, targs, tkwargs = t._load()
+                nt = master.submit(fn, *targs, tenant=t.tenant,
+                                   queue=t.queue, tag=t.tag,
+                                   priority=t.priority,
+                                   hbm_bytes=t.hbm_bytes, **tkwargs)
+            except BaseException as e:  # noqa: BLE001
+                t.error = e
+                t._finish()
+                continue
+
+            def mirror(new, old=t):
+                old.result = new.result
+                old.error = new.error
+                old._finish()
+
+            nt.add_done_callback(mirror)
+            resubmitted += 1
+        return resubmitted
+
+    def _recover_serving(self, pilot, survivors: List) -> int:
+        """ControlPlane hook: move a dead decode pilot's in-flight serve
+        requests onto surviving engines (router re-dispatch)."""
+        moved = 0
+        with self._lock:
+            routers = list(self._routers)
+        for r in routers:
+            moved += r.recover_pilot(pilot.uid)
+        return moved
+
+    # ---------------------------------------------------- checkpoint/resume
+    CHECKPOINT_VERSION = 1
+
+    def checkpoint(self, path: Optional[str] = None) -> str:
+        """Journal the session's DAG state to ``path`` (default: the
+        ctor's checkpoint_dir): completed stage results, placements, and
+        the DataPlane's named arrays with their lineage and home-pilot
+        names.  Writes are tmp + atomic rename, so a crash mid-
+        checkpoint leaves the previous one intact.  Virtual datasets
+        (KV-page leases) are skipped — serve state is recovered live by
+        the router, not from disk."""
+        path = path or self.checkpoint_dir
+        if path is None:
+            raise ValueError("no checkpoint path (pass one or set "
+                             "checkpoint_dir on the Session)")
+        os.makedirs(path, exist_ok=True)
+        with self._lock:
+            results = dict(self.results)
+            placements = {k: dict(v) for k, v in self.placements.items()}
+        uid2name = {p.uid: name for name, p in self.pilots.items()}
+        arrays: Dict[str, np.ndarray] = {}
+        homes: Dict[str, List[str]] = {}
+        lineage: Dict[str, Dict[str, Any]] = {}
+        virtual_skipped = 0
+        for name in self.dataplane.names():
+            pd = self.dataplane.get(name)
+            if pd is None:
+                continue
+            if pd.is_virtual:
+                virtual_skipped += 1
+                continue
+            arrays[name] = np.asarray(pd.array)
+            # homes keyed by pilot NAME: uids are process-local counters
+            homes[name] = sorted(
+                uid2name.get(uid, uid) if uid != GFS_ARCHIVE else uid
+                for uid in self.dataplane.home_pilots(name))
+            lin = self.dataplane.lineage_of(name)
+            if lin is not None:
+                lineage[name] = {"stage": lin.stage,
+                                 "inputs": list(lin.inputs)}
+
+        def _atomic(fname: str, write: Callable[[Any], None],
+                    mode: str = "wb") -> None:
+            tmp = os.path.join(path, fname + ".tmp")
+            with open(tmp, mode) as f:
+                write(f)
+            os.replace(tmp, os.path.join(path, fname))
+
+        _atomic("data.npz", lambda f: np.savez(f, **arrays))
+        host_results = jax.tree.map(
+            lambda x: np.asarray(x) if isinstance(x, jax.Array) else x,
+            results)
+        _atomic("results.pkl", lambda f: pickle.dump(host_results, f))
+        manifest = {"version": self.CHECKPOINT_VERSION, "t": time.time(),
+                    "completed": sorted(results),
+                    "placements": placements, "homes": homes,
+                    "lineage": lineage, "datasets": sorted(arrays),
+                    "virtual_skipped": virtual_skipped}
+        _atomic("manifest.json",
+                lambda f: json.dump(manifest, f, indent=1, default=str),
+                mode="w")
+        return path
+
+    def _maybe_checkpoint(self) -> None:
+        """Interval-gated journal write, called after each stage's
+        results land; a failed write must not fail the stage."""
+        if not self.checkpoint_dir or not self.checkpoint_interval_s:
+            return
+        with self._ckpt_lock:
+            now = time.monotonic()
+            if now - self._last_ckpt < self.checkpoint_interval_s:
+                return
+            self._last_ckpt = now
+        try:
+            self.checkpoint()
+        except BaseException as e:  # noqa: BLE001
+            self.control_plane.errors.append(e)
+
+    @classmethod
+    def resume(cls, path: str, rm: Optional[ResourceManager] = None,
+               **kw) -> "Session":
+        """Rebuild a Session from a checkpoint directory: completed
+        stage results and placements load immediately; the DataPlane's
+        arrays are restored lazily at the next :meth:`submit_dag` (they
+        need pilots to land on — add_pilot first).  Stages listed as
+        completed in the checkpoint are NOT re-run: submit_dag hands
+        them pre-resolved futures."""
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != cls.CHECKPOINT_VERSION:
+            raise ValueError(
+                f"checkpoint version {manifest.get('version')} != "
+                f"{cls.CHECKPOINT_VERSION}")
+        kw.setdefault("checkpoint_dir", path)
+        self = cls(rm, **kw)
+        with open(os.path.join(path, "results.pkl"), "rb") as f:
+            self.results = pickle.load(f)
+        self.placements = dict(manifest.get("placements", {}))
+        self._restored_stages = set(manifest.get("completed", ()))
+        self._restore_manifest = (path, manifest)
+        return self
+
+    def _restore_data(self) -> None:
+        """Lazy half of :meth:`resume`: put every checkpointed array
+        back on the DataPlane, homed on its original pilot when a pilot
+        of that name was re-registered (else any pilot), with lineage
+        reattached and the restore bytes ledgered as a GFS read."""
+        if self._restore_manifest is None:
+            return
+        path, manifest = self._restore_manifest
+        self._restore_manifest = None
+        if not self.pilots:
+            raise RuntimeError("resume: add_pilot before submitting a DAG "
+                               "(restored data needs devices to land on)")
+        data = np.load(os.path.join(path, "data.npz"))
+        for name in manifest.get("datasets", ()):
+            homes = manifest.get("homes", {}).get(name, [])
+            pilot = next((self.pilots[h] for h in homes
+                          if h in self.pilots
+                          and self.pilots[h].state is PilotState.ACTIVE),
+                         None)
+            if pilot is None:
+                pilot = next(p for p in self.pilots.values()
+                             if p.state is PilotState.ACTIVE)
+            arr = jax.device_put(jnp.asarray(data[name]),
+                                 replicated_sharding(pilot.devices))
+            lin_d = manifest.get("lineage", {}).get(name)
+            lin = (Lineage(stage=lin_d["stage"],
+                           inputs=tuple(lin_d["inputs"]))
+                   if lin_d else None)
+            self.dataplane.put(name, arr, pilot=pilot.uid, lineage=lin)
+            if GFS_ARCHIVE in homes:
+                self.dataplane.add_replica(name, GFS_ARCHIVE)
+            self.dataplane.record_moved(arr.nbytes, Link.GFS,
+                                        reason="session-resume")

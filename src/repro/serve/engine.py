@@ -357,6 +357,30 @@ class ServeEngine:
         if cb is not None:
             cb(req)
 
+    # ------------------------------------------------------------ recovery
+    def evacuate(self) -> List[Tuple[Request, Optional[PrefillResult]]]:
+        """Failure recovery: this engine's pilot died.  Hand back every
+        request that has not finished — waiting ones with their prefill
+        (reusable if its KV survives), active ones with ``None`` (their
+        decode state died with the pilot; they re-prefill elsewhere).
+        Active requests release their admission charge here; waiting
+        ones were never charged.  The caller (router) must have stopped
+        the engine's serve loop first."""
+        self._drain_intake()
+        out: List[Tuple[Request, Optional[PrefillResult]]] = list(self._waiting)
+        self._waiting = deque()
+        self._waiting_uids = set()
+        for slot in range(self.slots):
+            req = self.active[slot]
+            if req is None:
+                continue
+            self.active[slot] = None
+            self.remaining[slot] = 0
+            self.outputs.pop(req.uid, None)
+            self.admission.release(req, self)
+            out.append((req, None))
+        return out
+
     # ----------------------------------------------------------------- run
     @property
     def n_active(self) -> int:

@@ -26,7 +26,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.dataplane import Link, TransferCostModel
+from repro.core.dataplane import GFS_ARCHIVE, Link, TransferCostModel
 from repro.core.queues import DrfPolicy, QueueTree
 from repro.serve.engine import (AdmissionControl, PrefillResult, Request,
                                 ServeEngine)
@@ -153,7 +153,7 @@ class ServeRouter:
         self._all_done = threading.Event()
         self._all_done.set()
         self.stats = {"dispatched": 0, "cross_pilot": 0, "splice_bytes": 0,
-                      "prefill_offloaded": 0}
+                      "prefill_offloaded": 0, "recovered_requests": 0}
         for h in self.handles:
             h.engine.on_finish = self._on_finish
             h.start()
@@ -239,6 +239,55 @@ class ServeRouter:
                 req.output = None
                 req.error = exc            # type: ignore[attr-defined]
                 self._count_finished()
+
+    # ------------------------------------------------------------- recovery
+    def recover_pilot(self, pilot_uid: str) -> int:
+        """A decode pilot died: retire its engines and re-dispatch every
+        unfinished request onto the survivors.  KV pages spooled to
+        ``@gfs`` (free_policy='spool' deployments) are restored from the
+        archive onto the new engine's pilot; pages that lived only on
+        the dead pilot are gone — those requests get a fresh lease and
+        re-prefill.  Called from the ControlPlane's ``on_pilot_dead``
+        hook BEFORE the DataPlane drops the dead pilot's replicas, so
+        the archive flags are still visible.  Returns requests moved."""
+        with self._lock:
+            dead = [h for h in self.handles if h.pilot == pilot_uid]
+            if not dead:
+                return 0
+            survivors = [h for h in self.handles if h.pilot != pilot_uid]
+            if not survivors:
+                raise RuntimeError(
+                    f"serve router: last decode pilot {pilot_uid} died — "
+                    f"no survivor to take its requests")
+            self.handles = survivors
+        recovered = 0
+        for h in dead:
+            h.stop()
+            for req, pre in h.engine.evacuate():
+                target, _ = self._pick_engine(req)
+                lease = self.kv.lease(req.uid)
+                archived = (lease is not None and lease.pages and GFS_ARCHIVE
+                            in self.kv.data.home_pilots(lease.pages[0]))
+                if archived:
+                    # the cache survived in the archive: page it back in
+                    self.kv.restore(req.uid, target.pilot)
+                else:
+                    if lease is not None:
+                        self.kv.free(req.uid)
+                    lease = self.kv.alloc(req.uid,
+                                          len(req.tokens) + req.max_new,
+                                          self.prefill_pilot)
+                    req.kv_bytes = lease.nbytes
+                    self.kv.splice_to(req.uid, target.pilot)
+                if pre is None:
+                    # decode state died with the pilot: prefill again
+                    pre = self.prefill_fn(
+                        req.tokens, self._bucket_for(len(req.tokens)))
+                target.engine.submit_prefilled(req, pre)
+                recovered += 1
+        with self._lock:
+            self.stats["recovered_requests"] += recovered
+        return recovered
 
     # ------------------------------------------------------------- lifetime
     def _on_finish(self, req: Request) -> None:

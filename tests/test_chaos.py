@@ -1,0 +1,315 @@
+"""Fault tolerance under churn: injection, detection, recovery, resume."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (ComputeUnitDescription, CUState, FailureInjector,
+                        PilotDescription, PilotManager, ResourceManager)
+from repro.core.control_plane import ALIVE, DEAD, SUSPECT
+from repro.core.session import Session, hpc_stage
+
+
+def _work(dt=0.05, mesh=None):
+    time.sleep(dt)
+    return "ok"
+
+
+@pytest.fixture
+def churn_pm():
+    """Two 4-slot pilots on aliased devices, detection armed but driven
+    manually (no autonomous loop — tests call check_failures)."""
+    rm = ResourceManager(devices=jax.devices() * 8)
+    # timeouts must exceed the idle agent loop's 0.25s stamp cadence,
+    # or a healthy-but-idle pilot looks stale
+    pm = PilotManager(rm, heartbeat_timeout_s=0.3, suspect_grace_s=0.3)
+    yield pm
+    pm.shutdown()
+
+
+# ----------------------------------------------------------- injection
+def test_injector_trace_is_deterministic_and_logged():
+    rm = ResourceManager(devices=jax.devices() * 4)
+    pm = PilotManager(rm)
+    try:
+        a = pm.submit(PilotDescription(n_chips=2, name="a"))
+        b = pm.submit(PilotDescription(n_chips=2, name="b"))
+        inj = FailureInjector([a, b], seed=7,
+                              trace=[(0.0, "agent", "b")])
+        inj.start(tick_s=0.01)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and not inj.log:
+            time.sleep(0.01)
+        inj.stop()
+        assert [(e.kind, e.pilot) for e in inj.log] == [("agent", b.uid)]
+        assert b.agent._killed and not a.agent._killed
+        assert inj.counts() == {"chip": 0, "agent": 1, "pilot": 0}
+        assert not inj.errors
+    finally:
+        pm.shutdown()
+
+
+def test_injector_never_kills_below_min_alive():
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm = PilotManager(rm)
+    try:
+        a = pm.submit(PilotDescription(n_chips=2, name="only"))
+        inj = FailureInjector([a], seed=0, min_pilots_alive=1)
+        assert inj.kill_pilot() is None
+        assert inj.kill_agent(a) is None        # floor binds even when named
+        assert a.state.value == "active" and not a.agent._killed
+    finally:
+        pm.shutdown()
+
+
+# ----------------------------------------------------------- detection
+def test_heartbeat_detection_state_machine(churn_pm):
+    pm = churn_pm
+    a = pm.submit(PilotDescription(n_chips=4, name="a"))
+    b = pm.submit(PilotDescription(n_chips=4, name="b"))
+    cp = pm.control_plane
+    assert cp.check_failures() == []            # both fresh: nothing
+    assert cp.liveness_of(b.uid) == ALIVE
+    b.agent.kill()                              # last_alive freezes here
+    seen, events = [], []
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline and not events:
+        events = cp.check_failures()
+        seen.append(cp.liveness_of(b.uid))
+        time.sleep(0.05)
+    # the pilot passed through SUSPECT (grace window) before DEAD
+    assert SUSPECT in seen
+    assert len(events) == 1 and events[0].pilot == b.uid
+    assert cp.liveness_of(b.uid) == DEAD
+    assert b.state.value == "failed"
+    assert cp.liveness_of(a.uid) == ALIVE       # the survivor is untouched
+    # a dead pilot is never re-recovered
+    time.sleep(0.3)
+    assert cp.check_failures() == []
+
+
+def test_suspect_pilot_is_reprieved_by_a_fresh_beat(churn_pm):
+    pm = churn_pm
+    pm.submit(PilotDescription(n_chips=4, name="a"))
+    b = pm.submit(PilotDescription(n_chips=4, name="b"))
+    cp = pm.control_plane
+    # freeze b's loop without marking it crashed: stale but revivable
+    b.agent.last_alive = time.monotonic() - 0.4
+    cp.check_failures()
+    assert cp.liveness_of(b.uid) == SUSPECT
+    # the agent loop stamps again (a GC pause ended, say)
+    b.agent.last_alive = time.monotonic()
+    cp.check_failures()
+    assert cp.liveness_of(b.uid) == ALIVE
+
+
+# ------------------------------------------------------------ recovery
+def test_recovery_requeues_cus_exactly_once_and_reclaims_lease(churn_pm):
+    pm = churn_pm
+    a = pm.submit(PilotDescription(n_chips=4, name="a"))
+    b = pm.submit(PilotDescription(n_chips=4, name="b"))
+    cp = pm.control_plane
+    cus = [b.submit(ComputeUnitDescription(
+        fn=_work, args=(0.2,), n_chips=1, tag="w")) for _ in range(6)]
+    time.sleep(0.05)                     # let some CUs bind on b
+    b.kill()
+    ev = cp.recover_pilot(b, reason="test")
+    assert ev.reclaimed_chips == 4
+    assert ev.requeued_cus + ev.failed_cus >= 1
+    assert ev.failed_cus == 0
+    assert ev.regranted.get(a.uid) == 4  # survivor absorbed the chips
+    assert a.agent.scheduler.n_slots == 8
+    # every submitted CU completes exactly once, via the clone chain
+    assert [cu.follow(timeout=30) for cu in cus] == ["ok"] * 6
+    for cu in cus:
+        assert cu.state in (CUState.DONE, CUState.CANCELED)
+    # the dead pilot's lease is gone from the RM
+    assert not pm.rm.holdings(b.uid)
+    assert ev.recovery_s >= 0
+
+
+def test_killed_agent_never_publishes_over_the_clone(churn_pm):
+    """A worker thread outliving the agent crash must not resolve the
+    victim CU — the recovery's clone owns the publication."""
+    pm = churn_pm
+    a = pm.submit(PilotDescription(n_chips=4, name="a"))
+    b = pm.submit(PilotDescription(n_chips=4, name="b"))
+    cp = pm.control_plane
+    cu = b.submit(ComputeUnitDescription(
+        fn=_work, args=(0.6,), n_chips=1, tag="w"))
+    time.sleep(0.1)                      # running on b now
+    b.agent.kill()                       # thread pool keeps the worker alive
+    ev = cp.recover_pilot(b, reason="test")
+    assert ev.requeued_cus == 1
+    clone = cu.result
+    assert clone is not None and clone.uid != cu.uid
+    assert cu.state is CUState.CANCELED
+    assert cu.follow(timeout=30) == "ok"
+    time.sleep(0.8)                      # b's worker returns from its sleep
+    assert cu.result is clone            # ...and did not clobber the chain
+
+
+def test_lost_last_replica_rematerializes_through_lineage():
+    rm = ResourceManager(devices=jax.devices() * 8)
+    sess = Session(rm)
+    try:
+        sess.add_pilot(PilotDescription(n_chips=4, name="a"))
+        b = sess.add_pilot(PilotDescription(n_chips=4, name="b"))
+        sess.enable_fault_tolerance(heartbeat_timeout_s=0.2)
+
+        def produce(mesh=None):
+            return {"D": np.arange(8, dtype=np.float32)}
+
+        sess.run([hpc_stage("make_d", produce, outputs=("D",),
+                            pilot="b", n_chips=1)], timeout=60)
+        assert sess.dataplane.home_pilots("D") == {b.uid}
+        b.kill()
+        ev = sess.control_plane.recover_pilot(b, reason="test")
+        assert "D" in ev.lost_datasets
+        assert ev.rematerialized == 1
+        assert "D" in sess.dataplane      # re-produced on the survivor
+        assert b.uid not in sess.dataplane.home_pilots("D")
+    finally:
+        sess.shutdown()
+
+
+# ------------------------------------------- satellite: device-loss path
+def test_device_loss_exhausted_retries_fails_with_diagnostic():
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2))
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=_work, args=(5.0,), n_chips=1, tag="doomed", max_retries=0))
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and not cu.assigned_devices:
+            time.sleep(0.01)
+        cu.retries = 1                   # budget already spent
+        pilot.fail_device(cu.assigned_devices[0])
+        assert cu.state is CUState.FAILED
+        with pytest.raises(RuntimeError, match="exhausted its retry budget"):
+            cu.wait(1)
+        assert "doomed" in str(cu.error) and pilot.uid in str(cu.error)
+    finally:
+        pm.shutdown()
+
+
+def test_device_loss_within_budget_still_requeues():
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2))
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=_work, args=(0.3,), n_chips=1, tag="retry", max_retries=3))
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and not cu.assigned_devices:
+            time.sleep(0.01)
+        pilot.fail_device(cu.assigned_devices[0])
+        assert cu.follow(timeout=30) == "ok"
+        assert len(pilot.devices) == 1   # count-aware: ONE slot removed
+    finally:
+        pm.shutdown()
+
+
+# --------------------------------------- satellite: speculation resolver
+def test_speculation_first_finisher_wins_loser_canceled_uncharged():
+    rm = ResourceManager(devices=jax.devices() * 2)
+    pm = PilotManager(rm)
+    try:
+        pilot = pm.submit(PilotDescription(n_chips=2))
+        agent = pilot.agent
+
+        gate = {"first": True}
+
+        def racy(mesh=None):
+            if gate["first"]:
+                gate["first"] = False
+                time.sleep(1.5)          # the straggling original
+                return "loser"
+            return "winner"
+
+        # no EMA history: the placer estimate drives the watchdog
+        cu = pilot.submit(ComputeUnitDescription(
+            fn=racy, tag="spec", n_chips=1, tenant="t1",
+            est_runtime_s=0.05))
+        assert cu.wait(30) == "winner"
+        spec = [c for c in agent._cus.values() if c.speculative_of == cu.uid]
+        assert spec, "no est-driven speculative duplicate launched"
+        assert spec[0].state is CUState.DONE      # the actual winner
+        assert cu.state is CUState.CANCELED       # the loser: canceled...
+        assert cu.result == "winner"              # ...with result mirrored
+        time.sleep(1.6)                  # loser's thread returns late
+        assert cu.result == "winner"              # no clobber
+        # no leaked charge: every tenant queue back to zero
+        deadline = time.monotonic() + 5
+        tree = agent.scheduler.queues
+        while time.monotonic() < deadline and any(
+                q.chips_used or q.hbm_used for q in tree.queues.values()):
+            time.sleep(0.02)
+        for name, q in tree.queues.items():
+            assert q.chips_used == 0, f"queue {name} leaked a chip charge"
+            assert q.hbm_used == 0, f"queue {name} leaked an HBM charge"
+        assert agent.scheduler.n_free == 2
+    finally:
+        pm.shutdown()
+
+
+# --------------------------------------------------- checkpoint / resume
+def test_session_checkpoint_resume_skips_completed_stages(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    runs = {"a": 0, "b": 0}
+
+    def make(name, base):
+        def fn(mesh=None, **kw):
+            runs[name] += 1
+            return {name.upper(): np.full((4,), base, np.float32)}
+        return fn
+
+    stage_a = hpc_stage("a", make("a", 1.0), outputs=("A",))
+    stage_b = hpc_stage("b", make("b", 2.0), inputs=("A",), outputs=("B",))
+
+    s1 = Session(ResourceManager(devices=jax.devices() * 4),
+                 checkpoint_dir=ck)
+    try:
+        s1.add_pilot(PilotDescription(n_chips=4, name="p"))
+        # only stage a completes before the "crash"
+        s1.run([stage_a], timeout=60)
+        s1.checkpoint()
+    finally:
+        s1.shutdown()
+    assert runs == {"a": 1, "b": 0}
+
+    s2 = Session.resume(ck, ResourceManager(devices=jax.devices() * 4))
+    try:
+        s2.add_pilot(PilotDescription(n_chips=4, name="p"))
+        res = s2.run([stage_a, stage_b], timeout=60)
+        # the completed stage was not re-run; the rest of the DAG was
+        assert runs == {"a": 1, "b": 1}
+        assert np.allclose(np.asarray(res["a"]["A"]), 1.0)
+        assert np.allclose(np.asarray(res["b"]["B"]), 2.0)
+        assert "A" in s2.dataplane and "B" in s2.dataplane
+        lin = s2.dataplane.lineage_of("A")
+        assert lin is not None and lin.stage == "a"   # remat still works
+    finally:
+        s2.shutdown()
+
+
+def test_resume_requires_a_pilot_before_restoring_data(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    s1 = Session(ResourceManager(devices=jax.devices() * 2),
+                 checkpoint_dir=ck)
+    try:
+        s1.add_pilot(PilotDescription(n_chips=2, name="p"))
+        s1.run([hpc_stage("a", lambda mesh=None:
+                          {"A": np.ones(2, np.float32)}, outputs=("A",))],
+               timeout=60)
+        s1.checkpoint()
+    finally:
+        s1.shutdown()
+    s2 = Session.resume(ck, ResourceManager(devices=jax.devices() * 2))
+    try:
+        with pytest.raises(RuntimeError, match="add_pilot"):
+            s2.submit_dag([hpc_stage("b", lambda mesh=None: 1)])
+    finally:
+        s2.shutdown()
